@@ -1,0 +1,50 @@
+"""Paper Fig. 13: end-to-end batch-size sweep + OOM frontier.
+
+LoRA + recomputation + ZeRO-3 on 4 GPUs; batch grows until OOM. The paper's
+key claim: GMLake sustains batch sizes where the caching allocator OOMs
+(OPT-1.3B / OPT-13B / GPT-NeoX-20B), at equal-or-better throughput.
+"""
+
+from __future__ import annotations
+
+from repro.core import GB, PAPER_MODELS, run_workload, training_trace
+
+from .common import A100_EFFECTIVE_FLOPS, CUMALLOC_SECONDS, Row, emit, timed
+
+SWEEP = {
+    "opt-1.3b": (32, 64, 96, 128),
+    "opt-13b": (8, 16, 24, 32),
+    "gpt-neox-20b": (6, 12, 18, 24),
+}
+
+
+def run(fast: bool = False) -> None:
+    rows = []
+    items = list(SWEEP.items())[:1] if fast else SWEEP.items()
+    for mname, batches in items:
+        m = PAPER_MODELS[mname]
+        frontier = {"caching": 0, "gmlake": 0}
+        for batch in batches[:2] if fast else batches:
+            tr = training_trace(m, strategies="LRO", world=4, batch=batch,
+                                seq=2048, iters=4 if fast else 8)
+            for alloc in ("caching", "gmlake"):
+                res, us = timed(run_workload, tr, alloc, capacity_bytes=80 * GB)
+                if not res.oom:
+                    frontier[alloc] = max(frontier[alloc], batch)
+                tokens = batch * 2048
+                flops = 6.0 * (m.param_bytes // 2) * tokens
+                step_s = flops / (4 * A100_EFFECTIVE_FLOPS) + (
+                    res.model_cost / 8
+                ) * CUMALLOC_SECONDS
+                rows.append(Row(
+                    f"fig13/{mname}/bs{batch}/{alloc}", us,
+                    res.stats.peak_reserved / GB if not res.oom else float("nan"),
+                    extra=f"util={res.utilization:.3f};oom={int(res.oom)};"
+                          f"throughput={batch / step_s:.2f}sps",
+                ))
+        rows.append(Row(
+            f"fig13/{mname}/max_batch_gain", 0.0,
+            frontier["gmlake"] - frontier["caching"],
+            extra=f"gmlake={frontier['gmlake']};caching={frontier['caching']}",
+        ))
+    emit(rows, "Fig 13: batch sweep, peak reserved GB + OOM frontier (LRO)")

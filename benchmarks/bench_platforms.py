@@ -1,0 +1,39 @@
+"""Paper Fig. 12: scalability across training platforms.
+
+DeepSpeed (per-param ZeRO-3 gathers + prefetch) / FSDP (flat per-layer
+gathers) / Colossal-AI (fixed 64 MB chunk gathers) on OPT-13B / GLM-10B /
+GPT-2 with L+R, 4 GPUs — the paper's platform matrix.
+"""
+
+from __future__ import annotations
+
+from repro.core import GB, PAPER_MODELS, run_workload, training_trace
+
+from .common import Row, emit, timed
+
+MATRIX = (
+    ("opt-13b", "deepspeed"),
+    ("glm-10b", "fsdp"),
+    ("gpt2-1.5b", "colossal"),
+)
+
+
+def run(fast: bool = False) -> None:
+    rows = []
+    for mname, platform in MATRIX:
+        m = PAPER_MODELS[mname]
+        tr = training_trace(m, strategies="LR", world=4, batch=8, seq=2048,
+                            iters=4 if fast else 8, platform=platform)
+        util = {}
+        for alloc in ("caching", "gmlake"):
+            res, us = timed(run_workload, tr, alloc, capacity_bytes=80 * GB)
+            util[alloc] = res
+            rows.append(Row(
+                f"fig12/{platform}/{mname}/{alloc}", us, res.utilization,
+                extra=f"reserved_gb={res.reserved_gb:.1f}",
+            ))
+        rows.append(Row(
+            f"fig12/{platform}/{mname}/reserved_saving_gb", 0.0,
+            util["caching"].reserved_gb - util["gmlake"].reserved_gb,
+        ))
+    emit(rows, "Fig 12: platforms (deepspeed/fsdp/colossal), LR, 4 GPUs")

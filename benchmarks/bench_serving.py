@@ -1,0 +1,54 @@
+"""Beyond-paper: serving-side fragmentation (stitched KV cache arena).
+
+Continuous-batching KV churn — variable-length prompts arriving/retiring —
+replayed through caching vs GMLake, plus the stitch-kernel data-path cost
+(reference ops on CPU; the Pallas kernels target TPU and are validated in
+interpret mode by the test suite).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GB, MB, PAPER_MODELS, inference_trace, run_workload
+from repro.kernels import ops
+
+from .common import Row, emit, timed
+
+
+def kv_churn() -> list:
+    rows = []
+    for mname in ("opt-13b", "gpt-neox-20b"):
+        m = PAPER_MODELS[mname]
+        tr = inference_trace(m, n_requests=256, max_new=128, batch=16)
+        for alloc in ("caching", "gmlake"):
+            res, us = timed(run_workload, tr, alloc, capacity_bytes=80 * GB)
+            rows.append(Row(
+                f"serve/{mname}/{alloc}", us, res.utilization,
+                extra=f"reserved_gb={res.reserved_gb:.2f};oom={int(res.oom)}",
+            ))
+    return rows
+
+
+def stitch_data_path() -> list:
+    """Gather/scatter through an extent table vs contiguous copy (ref ops)."""
+    rows = []
+    arena = jax.random.normal(jax.random.PRNGKey(0), (256, 262144), jnp.float32)
+    for n_logical in (8, 64, 192):
+        cmap = jax.random.permutation(jax.random.PRNGKey(1), 256)[:n_logical]
+        g = jax.jit(ops.gather_ref)
+        g(arena, cmap).block_until_ready()
+        out, us = timed(lambda: g(arena, cmap).block_until_ready())
+        moved = n_logical * 262144 * 4
+        rows.append(Row(
+            f"stitch/gather_ref/{n_logical}chunks", us, moved / (us * 1e-6) / 1e9,
+            extra="GBps_host",
+        ))
+    return rows
+
+
+def run(fast: bool = False) -> None:
+    emit(kv_churn(), "Serving: KV-cache churn, caching vs GMLake")
+    if not fast:
+        emit(stitch_data_path(), "Serving: stitched gather data path (host ref)")

@@ -1,0 +1,58 @@
+"""Paper Fig. 14: memory trace + convergence analysis (GPT-NeoX-20B, LR).
+
+Records the reserved/active timeline for both allocators and GMLake's
+per-iteration BestFit state mix — the paper's convergence claim is that
+after ~4 iterations every allocation is an S1 exact match and physical
+allocation (S4/Alloc) stops entirely.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import GB, PAPER_MODELS, VMMDevice, replay, training_trace
+from repro.core.caching_allocator import CachingAllocator
+from repro.core.gmlake import GMLakeAllocator
+
+from .common import Row, emit, timed
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def run(fast: bool = False) -> None:
+    m = PAPER_MODELS["gpt-neox-20b"]
+    tr = training_trace(m, strategies="LR", world=4, batch=8, seq=2048,
+                        iters=4 if fast else 10)
+    rows = []
+    timelines = {}
+    per_iter = None
+    for name, cls in (("caching", CachingAllocator), ("gmlake", GMLakeAllocator)):
+        dev = VMMDevice(80 * GB)
+        alloc = cls(dev, record_timeline=True)
+        (res, marks), us = timed(replay, tr, alloc)
+        timelines[name] = res.stats.timeline[:: 25]
+        rows.append(Row(
+            f"fig14/{name}/peak_reserved_gb", us, res.stats.peak_reserved / GB,
+            extra=f"util={res.utilization:.3f}",
+        ))
+        if name == "gmlake":
+            per_iter = []
+            prev = {f"S{i}": 0 for i in range(1, 6)}
+            for label, counts in marks:
+                if not counts:
+                    continue
+                delta = {k: counts[k] - prev[k] for k in counts}
+                prev = counts
+                tot = sum(delta.values()) or 1
+                per_iter.append({"iter": label, "s1_frac": delta["S1"] / tot,
+                                 "s4_allocs": delta["S4"]})
+            for it in per_iter:
+                rows.append(Row(
+                    f"fig14/convergence/{it['iter']}/s1_frac", 0.0,
+                    it["s1_frac"], extra=f"s4={it['s4_allocs']}",
+                ))
+    ART.mkdir(exist_ok=True)
+    (ART / "fig14_trace.json").write_text(json.dumps(
+        {"timelines": timelines, "convergence": per_iter}, default=float))
+    emit(rows, "Fig 14: memory trace + S1 convergence (artifacts/fig14_trace.json)")

@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: timed runs + CSV emission.
+
+Output convention (per harness spec): ``name,us_per_call,derived`` where
+``us_per_call`` is host wall time per top-level call and ``derived`` is the
+figure's headline metric (utilization / GB saved / ratio ...).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+#: modeled wall time of one cuMalloc (unit of the VMM cost model); used to
+#: convert modeled device-API cost into seconds for throughput proxies.
+CUMALLOC_SECONDS = 10e-6
+
+#: A100 bf16 peak x typical MFU — the throughput proxy's compute model
+#: (paper testbed is 8xA100-80G).
+A100_EFFECTIVE_FLOPS = 312e12 * 0.4
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: float
+    extra: str = ""
+
+    def csv(self) -> str:
+        base = f"{self.name},{self.us_per_call:.1f},{self.derived:.6g}"
+        return base + (f",{self.extra}" if self.extra else "")
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: List[Row], header: Optional[str] = None) -> None:
+    if header:
+        print(f"# {header}")
+    for r in rows:
+        print(r.csv())

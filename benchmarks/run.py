@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+
+Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
+    alloc_latency  Fig 6 + Table 1 + native-vs-caching (~10x)
+    strategies     Fig 3/10  (N/R/LR/RO/LRO x caching/gmlake)
+    scaleout       Fig 4/11  (1..16 GPUs)
+    platforms      Fig 12    (deepspeed / fsdp / colossal)
+    end2end        Fig 13    (batch sweep + OOM frontier + throughput)
+    trace          Fig 14    (memory timeline + S1 convergence)
+    serving        beyond-paper: stitched KV arena under churn
+    roofline       assignment: dry-run roofline table
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from . import (
+        bench_alloc_latency,
+        bench_end2end,
+        bench_platforms,
+        bench_scaleout,
+        bench_serving,
+        bench_strategies,
+        bench_trace,
+        roofline_all,
+    )
+
+    modules = {
+        "alloc_latency": bench_alloc_latency,
+        "strategies": bench_strategies,
+        "scaleout": bench_scaleout,
+        "platforms": bench_platforms,
+        "end2end": bench_end2end,
+        "trace": bench_trace,
+        "serving": bench_serving,
+        "roofline": roofline_all,
+    }
+    names = [args.only] if args.only else list(modules)
+    t0 = time.time()
+    for name in names:
+        print(f"\n== {name} " + "=" * (60 - len(name)))
+        modules[name].run(fast=args.fast)
+    print(f"\n# total benchmark wall: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

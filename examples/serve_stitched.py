@@ -1,0 +1,12 @@
+"""Serving with the stitched KV arena: continuous batching + live memory
+accounting + allocator comparison on the engine's real trace.
+
+    PYTHONPATH=src python examples/serve_stitched.py --requests 16
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main(["--arch", "smollm-135m", "--smoke"] + sys.argv[1:])

@@ -1,0 +1,4 @@
+"""GMLake on JAX/TPU: virtual-memory-stitching allocation inside a
+multi-pod training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,95 @@
+"""Assigned input shapes and ``input_specs()`` (ShapeDtypeStruct stand-ins).
+
+Four shapes per architecture (assignment):
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; ONLY for
+                                                 sub-quadratic archs (SWA /
+                                                 hybrid / SSM), else SKIP
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable, no
+device allocation — for every model input of a given (config, shape) cell.
+For [vlm]/[audio] the modality frontend is a stub: specs carry precomputed
+patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import moe, paligemma, rwkv6, transformer, whisper, zamba2
+from ..models.api import family_of
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+#: decoder-prompt fraction of seq_len for enc-dec prefill
+AUDIO_DEC_FRACTION = 8
+
+
+def supports_long_context(cfg) -> bool:
+    """long_500k runs only for sub-quadratic attention (assignment)."""
+    if isinstance(cfg, (rwkv6.RWKV6Config, zamba2.Zamba2Config)):
+        return True
+    if isinstance(cfg, transformer.TransformerConfig) and cfg.window is not None:
+        return True  # sliding-window attention
+    return False
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def token_batch_specs(cfg, shape: ShapeSpec) -> Dict:
+    """Model inputs for the train/prefill paths (tokens + modality stubs)."""
+    b, s = shape.global_batch, shape.seq_len
+    if isinstance(cfg, paligemma.PaliGemmaConfig):
+        p = cfg.n_patches
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), cfg.dtype),
+            "tokens": _i32((b, s - p)),
+        }
+    if isinstance(cfg, whisper.WhisperConfig):
+        toks = s if shape.kind == "train" else max(s // AUDIO_DEC_FRACTION, 64)
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype),
+            "tokens": _i32((b, toks)),
+        }
+    return {"tokens": _i32((b, s))}
+
+
+def cache_specs(cfg, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStructs of the serve cache for decode shapes."""
+    fam = family_of(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if isinstance(cfg, whisper.WhisperConfig):
+        init = lambda: fam.init_cache(cfg, b, s, s)  # noqa: E731
+    elif isinstance(cfg, rwkv6.RWKV6Config):
+        init = lambda: fam.init_cache(cfg, b)  # noqa: E731  (O(1) state)
+    else:
+        init = lambda: fam.init_cache(cfg, b, s)  # noqa: E731
+    return jax.eval_shape(init)
+
+
+def decode_token_specs(shape: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return _i32((shape.global_batch,))

@@ -1,0 +1,74 @@
+"""GMLake core: virtual-memory-stitching allocation (the paper's contribution).
+
+Layers (bottom-up): chunks (device model + extents) -> caching_allocator
+(BFC baseline) / gmlake (VMS allocator) -> trace (workload synthesis +
+replay) -> arena / kvcache / offload (JAX integrations).
+"""
+
+from .chunks import (
+    CHUNK_SIZE,
+    DEFAULT_FRAG_LIMIT,
+    GB,
+    MB,
+    SMALL_ALLOC_LIMIT,
+    DeviceOOM,
+    Extent,
+    VMMDevice,
+    num_chunks,
+    pack_extents,
+    round_up,
+    unpack_extents,
+)
+from .caching_allocator import (
+    Allocation,
+    AllocatorOOM,
+    CachingAllocator,
+    NativeAllocator,
+)
+from .gmlake import GMLakeAllocator, PBlock, SBlock
+from .metrics import AllocatorStats, ReplayResult, mem_reduction_ratio
+from .trace import (
+    PAPER_MODELS,
+    ModelDesc,
+    Trace,
+    TraceEvent,
+    TraceRecorder,
+    inference_trace,
+    replay,
+    run_workload,
+    training_trace,
+)
+
+__all__ = [
+    "CHUNK_SIZE",
+    "DEFAULT_FRAG_LIMIT",
+    "GB",
+    "MB",
+    "SMALL_ALLOC_LIMIT",
+    "DeviceOOM",
+    "Extent",
+    "VMMDevice",
+    "num_chunks",
+    "pack_extents",
+    "round_up",
+    "unpack_extents",
+    "Allocation",
+    "AllocatorOOM",
+    "CachingAllocator",
+    "NativeAllocator",
+    "GMLakeAllocator",
+    "PBlock",
+    "SBlock",
+    "AllocatorStats",
+    "ReplayResult",
+    "mem_reduction_ratio",
+    "PAPER_MODELS",
+    "ModelDesc",
+    "Trace",
+    "TraceEvent",
+    "TraceRecorder",
+    "inference_trace",
+    "replay",
+    "run_workload",
+    "training_trace",
+]

@@ -1,0 +1,133 @@
+"""StitchedArena: the JAX-side memory lake.
+
+One pre-reserved HBM buffer of 2 MB chunks, managed by the GMLake allocator
+(host-side metadata) and accessed through the stitch kernels (device-side
+data movement). This is the TPU materialisation of the paper's design: the
+allocator decides *which* chunks back a logical tensor; the extent table /
+chunk map carries that decision to the DMA engine.
+
+Everything is functional: ``store``/``load`` return new buffers / arrays and
+the caller (or the ``Arena`` convenience wrapper) threads the buffer state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .caching_allocator import Allocation
+from .chunks import CHUNK_SIZE, VMMDevice
+from .gmlake import GMLakeAllocator
+from .trace import TraceRecorder
+
+
+@dataclass(frozen=True)
+class ArenaConfig:
+    n_chunks: int
+    dtype: jnp.dtype = jnp.bfloat16
+    #: interpret=True runs the Pallas kernels in Python (CPU validation)
+    interpret: bool = False
+    #: fall back to pure-jnp reference ops (no Pallas at all)
+    use_reference_ops: bool = False
+
+    @property
+    def itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def chunk_elems(self) -> int:
+        return CHUNK_SIZE // self.itemsize
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.n_chunks * CHUNK_SIZE
+
+
+class Arena:
+    """GMLake allocator + device buffer + stitch-kernel access paths."""
+
+    def __init__(self, config: ArenaConfig, allocator: Optional[GMLakeAllocator] = None,
+                 recorder: Optional[TraceRecorder] = None):
+        self.config = config
+        self.device_model = (
+            allocator.device if allocator is not None else VMMDevice(config.capacity_bytes)
+        )
+        self.allocator = allocator or GMLakeAllocator(self.device_model)
+        self.recorder = recorder
+        self.buf = jnp.zeros((config.n_chunks, config.chunk_elems), config.dtype)
+        self._trace_ids: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    # allocation (host metadata only)
+    # ------------------------------------------------------------------
+    def alloc_elems(self, n_elems: int, label: str = "") -> Allocation:
+        nbytes = int(n_elems) * self.config.itemsize
+        alloc = self.allocator.malloc(max(nbytes, CHUNK_SIZE))
+        if self.recorder is not None:
+            self._trace_ids[id(alloc)] = self.recorder.alloc(alloc.req_size, label)
+        return alloc
+
+    def free(self, alloc: Allocation) -> None:
+        self.allocator.free(alloc)
+        if self.recorder is not None:
+            self.recorder.free(self._trace_ids.pop(id(alloc)))
+
+    def chunk_map(self, alloc: Allocation, pad_to: Optional[int] = None) -> jax.Array:
+        return ops.chunk_map_from_extents(alloc.block.extents, pad_to=pad_to)
+
+    # ------------------------------------------------------------------
+    # data movement (device)
+    # ------------------------------------------------------------------
+    def _ops(self):
+        c = self.config
+        if c.use_reference_ops:
+            return ops.gather_ref, ops.scatter_ref
+        gather = lambda a, m: ops.gather(a, m, interpret=c.interpret)  # noqa: E731
+        scatter = lambda a, m, v: ops.scatter(a, m, v, interpret=c.interpret)  # noqa: E731
+        return gather, scatter
+
+    def store(self, alloc: Allocation, array: jax.Array) -> None:
+        """Write a logical tensor into the allocation's chunks."""
+        c = self.config
+        flat = array.astype(c.dtype).reshape(-1)
+        n_chunks = -(-flat.size // c.chunk_elems)
+        cmap = self.chunk_map(alloc)
+        assert n_chunks <= cmap.shape[0], (
+            f"tensor needs {n_chunks} chunks, allocation has {cmap.shape[0]}"
+        )
+        pad = n_chunks * c.chunk_elems - flat.size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        _, scatter = self._ops()
+        self.buf = scatter(self.buf, cmap[:n_chunks], flat.reshape(n_chunks, c.chunk_elems))
+
+    def load(self, alloc: Allocation, shape: Tuple[int, ...], dtype=None) -> jax.Array:
+        """Read a logical tensor back out of the allocation's chunks."""
+        c = self.config
+        n_elems = int(np.prod(shape))
+        n_chunks = -(-n_elems // c.chunk_elems)
+        cmap = self.chunk_map(alloc)[:n_chunks]
+        gather, _ = self._ops()
+        flat = gather(self.buf, cmap).reshape(-1)[:n_elems]
+        out = flat.reshape(shape)
+        return out.astype(dtype) if dtype is not None else out
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def reserved_bytes(self) -> int:
+        return self.allocator.reserved_bytes
+
+    @property
+    def active_bytes(self) -> int:
+        return self.allocator.stats.active_bytes
+
+    @property
+    def utilization(self) -> float:
+        return self.allocator.stats.utilization

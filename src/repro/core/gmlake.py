@@ -1,0 +1,450 @@
+"""GMLake: virtual-memory-stitching allocator (paper §3–§4).
+
+Faithful reproduction of the paper's allocator on top of the chunk-granular
+device model (GPU physical pages -> arena chunk ids; see DESIGN.md §2):
+
+  * ``PBlock``   — primitive block: owns an ordered list of physical chunks
+                   plus its own VA reservation. Created only by ``_alloc_new``
+                   (paper: Alloc), divided only by ``_split`` (paper: Split).
+  * ``SBlock``   — stitched block: a VA reservation re-mapping the chunks of
+                   one or more pBlocks (paper: Stitch). Never split. Active
+                   iff any member pBlock is active.
+  * ``BestFit``  — Algorithm 1 verbatim: S1 exact match (the only state where
+                   an sBlock may be handed out), S2 single larger block,
+                   S3 stitch multiple blocks, S4 insufficient -> Alloc.
+  * Deallocation = ``Update`` (state flip only, physical memory kept),
+    ``StitchFree`` = LRU eviction of inactive sBlocks when the sPool exceeds
+    its VA budget (paper §4.2.3).
+  * Fragmentation limit (default 128 MB): blocks below it are neither split
+    nor used as stitch sources. Requests < 2 MB go to an embedded splitting
+    (caching) pool, as in the paper (§3.1).
+
+Emergency paths beyond the paper's letter (documented in DESIGN.md §7): on
+S4 shortfall we retry BestFit ignoring the fragmentation limit and release
+cached small-pool segments before declaring OOM — chunk-granular stitching
+guarantees every inactive byte is usable, which is the paper's
+"theoretically eliminates all fragmentation" claim (§4.2.1) made operational.
+"""
+
+from __future__ import annotations
+
+import itertools
+from bisect import bisect_left, insort
+from typing import Dict, List, Optional, Tuple
+
+from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
+from .chunks import (
+    CHUNK_SIZE,
+    DEFAULT_FRAG_LIMIT,
+    SMALL_ALLOC_LIMIT,
+    DeviceOOM,
+    Extent,
+    VMMDevice,
+    pack_extents,
+    round_up,
+)
+from .metrics import AllocatorStats
+
+_ids = itertools.count()
+
+
+class PBlock:
+    __slots__ = ("pid", "size", "chunks", "active", "sblocks", "va")
+
+    def __init__(self, chunks: List[int], va: int = 0):
+        self.pid = next(_ids)
+        self.chunks = chunks
+        self.size = len(chunks) * CHUNK_SIZE
+        self.active = False
+        self.sblocks: set = set()
+        self.va = va
+
+    @property
+    def extents(self) -> List[Extent]:
+        return pack_extents(self.chunks)
+
+    def __repr__(self):
+        return f"PBlock(id={self.pid}, size={self.size >> 20}MB, active={self.active})"
+
+
+class SBlock:
+    __slots__ = ("sid", "size", "pblocks", "active_members", "va", "last_use")
+
+    def __init__(self, pblocks: List[PBlock], tick: int, va: int = 0):
+        self.sid = next(_ids)
+        self.pblocks = list(pblocks)
+        self.size = sum(p.size for p in pblocks)
+        self.active_members = sum(1 for p in pblocks if p.active)
+        self.va = va
+        self.last_use = tick
+        for p in pblocks:
+            p.sblocks.add(self)
+
+    @property
+    def active(self) -> bool:
+        return self.active_members > 0
+
+    @property
+    def chunks(self) -> List[int]:
+        out: List[int] = []
+        for p in self.pblocks:
+            out.extend(p.chunks)
+        return out
+
+    @property
+    def extents(self) -> List[Extent]:
+        return pack_extents(self.chunks)
+
+    def __repr__(self):
+        return (
+            f"SBlock(id={self.sid}, size={self.size >> 20}MB, "
+            f"n_p={len(self.pblocks)}, active={self.active})"
+        )
+
+
+def _key(block) -> int:
+    return block.pid if isinstance(block, PBlock) else block.sid
+
+
+class _SortedPool:
+    """Ascending (size, id) sorted pool of *inactive* blocks."""
+
+    def __init__(self):
+        self._lst: List[tuple] = []
+
+    def __len__(self):
+        return len(self._lst)
+
+    def __iter__(self):
+        return (e[2] for e in self._lst)
+
+    def add(self, block) -> None:
+        insort(self._lst, (block.size, _key(block), block))
+
+    def remove(self, block) -> None:
+        i = bisect_left(self._lst, (block.size, _key(block), block))
+        assert i < len(self._lst) and self._lst[i][2] is block, "pool corruption"
+        self._lst.pop(i)
+
+    def exact(self, size: int):
+        i = bisect_left(self._lst, (size, -1, None))
+        if i < len(self._lst) and self._lst[i][0] == size:
+            return self._lst[i][2]
+        return None
+
+    def best_fit_at_least(self, size: int):
+        """Smallest block with block.size >= size."""
+        i = bisect_left(self._lst, (size, -1, None))
+        if i < len(self._lst):
+            return self._lst[i][2]
+        return None
+
+    def descending(self):
+        return (e[2] for e in reversed(self._lst))
+
+    def total_bytes(self) -> int:
+        return sum(e[0] for e in self._lst)
+
+
+class GMLakeAllocator:
+    """The paper's allocator. Drop-in interchangeable with CachingAllocator."""
+
+    name = "gmlake"
+
+    #: The paper quotes 128 MB as an example fragmentation limit (§4.2.3) and
+    #: notes the hyper-parameters are "empirically configured ... through best
+    #: practices" (§5.1). On our workload suite 8 MB is the empirical optimum
+    #: (see EXPERIMENTS.md §Allocator); 128 MB remains available as
+    #: ``chunks.DEFAULT_FRAG_LIMIT``.
+    TUNED_FRAG_LIMIT = 8 * 1024 * 1024
+
+    def __init__(
+        self,
+        device: VMMDevice,
+        frag_limit: int = TUNED_FRAG_LIMIT,
+        sblock_va_budget: Optional[int] = None,
+        record_timeline: bool = False,
+    ):
+        self.device = device
+        self.frag_limit = frag_limit
+        # paper §4.2.3: VA for stitched blocks is capped; LRU StitchFree past it
+        self.sblock_va_budget = (
+            sblock_va_budget if sblock_va_budget is not None else 4 * device.capacity_bytes
+        )
+        self.stats = AllocatorStats(record_timeline=record_timeline)
+        self.state_counts: Dict[str, int] = {f"S{i}": 0 for i in range(1, 6)}
+
+        self._inactive_p = _SortedPool()
+        self._inactive_s = _SortedPool()
+        self._pblocks: Dict[int, PBlock] = {}  # registry of all live pBlocks
+        self._all_sblocks: List[SBlock] = []
+        self._sblock_va_bytes = 0
+        self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
+        self._tick = 0
+
+        # requests < 2 MB use the classic splitting pool (paper §3.1)
+        self._small = CachingAllocator(device)
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    @property
+    def reserved_bytes(self) -> int:
+        return self._chunk_bytes + self._small.reserved_bytes
+
+    # ------------------------------------------------------------------
+    # activity propagation
+    # ------------------------------------------------------------------
+    def _activate_p(self, p: PBlock) -> None:
+        """inactive -> active: leaves the inactive pool, bumps sBlock counts."""
+        assert not p.active
+        self._inactive_p.remove(p)
+        p.active = True
+        for s in p.sblocks:
+            if s.active_members == 0:
+                self._inactive_s.remove(s)
+            s.active_members += 1
+
+    def _deactivate_p(self, p: PBlock) -> None:
+        """active -> inactive. Also correct for freshly Alloc'd blocks that
+        were never in the inactive pool (active blocks are never pooled)."""
+        assert p.active
+        p.active = False
+        self._inactive_p.add(p)
+        for s in p.sblocks:
+            s.active_members -= 1
+            assert s.active_members >= 0
+            if s.active_members == 0:
+                self._inactive_s.add(s)
+
+    # ------------------------------------------------------------------
+    # primitive operations: Alloc / Split / Stitch / StitchFree
+    # ------------------------------------------------------------------
+    def _alloc_new(self, size: int) -> PBlock:
+        """Paper's Alloc: the only creator of physical chunks."""
+        chunks = self.device.vmm_alloc(size)
+        p = PBlock(chunks)
+        self._pblocks[p.pid] = p
+        self._chunk_bytes += p.size
+        p.active = True  # handed out or immediately stitched by the caller
+        return p
+
+    def _split(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
+        """Paper's Split: divide an *inactive* pBlock; re-map both halves.
+
+        sBlocks referencing the old pBlock substitute the two halves in
+        place (chunk coverage identical) — the paper's "new pBlocks replace
+        the predecessor" without invalidating the stitched pattern tape.
+        """
+        assert not p.active and 0 < first_size < p.size
+        assert first_size % CHUNK_SIZE == 0
+        k = first_size // CHUNK_SIZE
+        self._inactive_p.remove(p)
+        del self._pblocks[p.pid]
+        a = PBlock(p.chunks[:k])
+        b = PBlock(p.chunks[k:])
+        self._pblocks[a.pid] = a
+        self._pblocks[b.pid] = b
+        # two new VA reservations + remap (charged to the device model)
+        self.device.vmm_map_existing(len(a.chunks))
+        self.device.vmm_map_existing(len(b.chunks))
+        for s in p.sblocks:
+            i = s.pblocks.index(p)
+            s.pblocks[i : i + 1] = [a, b]
+            a.sblocks.add(s)
+            b.sblocks.add(s)
+        p.sblocks.clear()
+        self._inactive_p.add(a)
+        self._inactive_p.add(b)
+        return a, b
+
+    def _stitch(self, pblocks: List[PBlock]) -> SBlock:
+        """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create."""
+        n = sum(len(p.chunks) for p in pblocks)
+        self.device.vmm_map_existing(n)
+        s = SBlock(pblocks, tick=self._tick)
+        self._all_sblocks.append(s)
+        self._sblock_va_bytes += s.size
+        if s.active_members == 0:
+            self._inactive_s.add(s)
+        self._maybe_stitch_free()
+        return s
+
+    def _maybe_stitch_free(self) -> None:
+        """Paper's StitchFree: LRU-evict inactive sBlocks past the VA budget."""
+        if self._sblock_va_bytes <= self.sblock_va_budget:
+            return
+        victims = sorted(
+            (s for s in self._all_sblocks if not s.active), key=lambda s: s.last_use
+        )
+        for s in victims:
+            if self._sblock_va_bytes <= self.sblock_va_budget:
+                break
+            self._destroy_sblock(s)
+
+    def _destroy_sblock(self, s: SBlock) -> None:
+        if s.active_members == 0:
+            self._inactive_s.remove(s)
+        self._all_sblocks.remove(s)
+        self._sblock_va_bytes -= s.size
+        for p in s.pblocks:
+            p.sblocks.discard(s)
+        self.device.cu_mem_unmap(len(s.pblocks))
+        self.device.cu_mem_address_free()
+
+    # ------------------------------------------------------------------
+    # BestFit — Algorithm 1
+    # ------------------------------------------------------------------
+    def _best_fit(self, bsize: int, ignore_frag_limit: bool = False):
+        """Returns (state, candidate blocks). States 1..4 as in the paper."""
+        # S1: exact match over inactive sBlocks U pBlocks (the only state in
+        # which an sBlock may be assigned).
+        blk = self._inactive_p.exact(bsize)
+        if blk is None:
+            blk = self._inactive_s.exact(bsize)
+        if blk is not None:
+            return 1, [blk]
+
+        # S2: single best-fit pBlock >= bsize.
+        single = self._inactive_p.best_fit_at_least(bsize)
+        if single is not None:
+            return 2, [single]
+
+        # S3/S4: accumulate largest-first until the sum covers the request.
+        cb: List[PBlock] = []
+        cb_size = 0
+        for p in self._inactive_p.descending():
+            if not ignore_frag_limit and p.size < self.frag_limit:
+                continue  # paper §4.2.3: blocks below the limit are not stitched
+            cb.append(p)
+            cb_size += p.size
+            if cb_size >= bsize:
+                return 3, cb
+        return 4, cb
+
+    # ------------------------------------------------------------------
+    # allocation strategy (paper Fig. 9)
+    # ------------------------------------------------------------------
+    def malloc(self, size: int) -> Allocation:
+        if size < SMALL_ALLOC_LIMIT:
+            alloc = self._small.malloc(size)
+            alloc.owner = self
+            self.stats.on_alloc(alloc.block_size, self.reserved_bytes)
+            return alloc
+
+        self._tick += 1
+        bsize = round_up(size, CHUNK_SIZE)
+        try:
+            block = self._malloc_vms(bsize)
+        except DeviceOOM as e:
+            self.state_counts["S5"] += 1
+            raise AllocatorOOM(
+                f"GMLake OOM for {size} bytes (reserved={self.reserved_bytes}, "
+                f"active={self.stats.active_bytes}, device_free={self.device.free_bytes})"
+            ) from e
+        if isinstance(block, SBlock):
+            block.last_use = self._tick
+        self.stats.on_alloc(block.size, self.reserved_bytes)
+        return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
+
+    def _malloc_vms(self, bsize: int):
+        state, cb = self._best_fit(bsize)
+        if state == 4:
+            # If a fresh Alloc would not fit, first retry using every inactive
+            # byte (ignore the frag limit), then drop cached small segments.
+            need = bsize - sum(p.size for p in cb)
+            if need > self.device.free_bytes:
+                state, cb = self._best_fit(bsize, ignore_frag_limit=True)
+                if state == 4:
+                    need = bsize - sum(p.size for p in cb)
+                    if need > self.device.free_bytes:
+                        self._small.release_cached()
+        self.state_counts[f"S{state}"] += 1
+
+        if state == 1:
+            blk = cb[0]
+            if isinstance(blk, PBlock):
+                self._activate_p(blk)
+            else:
+                for p in blk.pblocks:
+                    self._activate_p(p)
+            return blk
+
+        if state == 2:
+            p = cb[0]
+            # paper §4.2.3: blocks below the frag limit are not split
+            if p.size == bsize or p.size < self.frag_limit:
+                self._activate_p(p)
+                return p
+            a, b = self._split(p, bsize)
+            self._activate_p(a)
+            # opportunistic stitch of the two halves preserves the original
+            # size in the pattern tape (paper Fig. 9 state S2)
+            self._stitch([a, b])
+            return a
+
+        if state == 3:
+            total = sum(p.size for p in cb)
+            if total > bsize:
+                last = cb[-1]
+                keep = last.size - (total - bsize)
+                if keep > 0 and last.size >= self.frag_limit:
+                    a, _b = self._split(last, keep)
+                    cb[-1] = a
+            if len(cb) == 1:  # degenerate after split: a plain pBlock handout
+                self._activate_p(cb[0])
+                return cb[0]
+            for p in cb:
+                self._activate_p(p)
+            return self._stitch(cb)
+
+        # state == 4: insufficient inactive blocks -> Alloc new physical memory
+        have = sum(p.size for p in cb)
+        need = bsize - have
+        new_p = self._alloc_new(need)  # raises DeviceOOM -> S5 upstream
+        if not cb:
+            return new_p
+        for p in cb:
+            self._activate_p(p)
+        return self._stitch(cb + [new_p])
+
+    # ------------------------------------------------------------------
+    # deallocation: Update (no physical free)
+    # ------------------------------------------------------------------
+    def free(self, alloc: Allocation) -> None:
+        block = alloc.block
+        if isinstance(block, PBlock):
+            self._deactivate_p(block)
+        elif isinstance(block, SBlock):
+            for p in block.pblocks:
+                self._deactivate_p(p)
+            block.last_use = self._tick
+            self._maybe_stitch_free()  # budget may be enforceable only now
+        else:  # small-pool block
+            self._small.free(alloc)
+            self.stats.on_free(alloc.block_size, self.reserved_bytes)
+            return
+        self.stats.on_free(alloc.block_size, self.reserved_bytes)
+
+    # ------------------------------------------------------------------
+    # debug / test support
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        seen_chunks: Dict[int, int] = {}
+        inactive_ids = {p.pid for p in self._inactive_p}
+        for p in self._pblocks.values():
+            for c in p.chunks:
+                assert c not in seen_chunks, f"chunk {c} owned by two pBlocks"
+                seen_chunks[c] = p.pid
+            # active blocks are never pooled; inactive blocks always are
+            assert (p.pid in inactive_ids) == (not p.active)
+        inactive_s_ids = {s.sid for s in self._inactive_s}
+        for s in self._all_sblocks:
+            assert s.size == sum(p.size for p in s.pblocks)
+            assert s.active_members == sum(1 for p in s.pblocks if p.active)
+            assert (s.sid in inactive_s_ids) == (not s.active)
+            for p in s.pblocks:
+                assert s in p.sblocks
+                assert p.pid in self._pblocks
+        assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
+        assert self._sblock_va_bytes == sum(s.size for s in self._all_sblocks)

@@ -1,0 +1,82 @@
+"""Host-offload staging through the GMLake arena (ZeRO-Offload style).
+
+Training-side integration of the allocator: optimizer shards / activation
+checkpoints are spilled to host memory and staged back through arena
+allocations. Every stage allocation goes through GMLake, so the irregular
+alloc/free stream that fragments the caching allocator (paper §2.3,
+offload = 'O') is absorbed by stitching instead. A ``TraceRecorder`` can
+capture the real event stream for replay benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arena import Arena, ArenaConfig
+from .caching_allocator import Allocation
+from .trace import TraceRecorder
+
+
+@dataclass
+class _Resident:
+    alloc: Allocation
+    shape: Tuple[int, ...]
+    dtype: object
+
+
+class OffloadManager:
+    """Named tensors living either in the arena (device) or on host."""
+
+    def __init__(self, arena: Arena, recorder: Optional[TraceRecorder] = None):
+        self.arena = arena
+        if recorder is not None and self.arena.recorder is None:
+            self.arena.recorder = recorder
+        self._device: Dict[str, _Resident] = {}
+        self._host: Dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    def put(self, name: str, array: jax.Array) -> None:
+        """Place (or replace) a tensor in the arena."""
+        if name in self._device:
+            self.drop(name)
+        alloc = self.arena.alloc_elems(array.size, f"offload.{name}")
+        self.arena.store(alloc, array)
+        self._device[name] = _Resident(alloc, tuple(array.shape), array.dtype)
+
+    def get(self, name: str) -> jax.Array:
+        """Read a tensor (staging it back from host if spilled)."""
+        if name not in self._device:
+            self.fetch(name)
+        r = self._device[name]
+        return self.arena.load(r.alloc, r.shape, r.dtype)
+
+    def spill(self, name: str) -> None:
+        """Device -> host; frees the arena allocation."""
+        r = self._device.pop(name)
+        self._host[name] = np.asarray(self.arena.load(r.alloc, r.shape, r.dtype))
+        self.arena.free(r.alloc)
+
+    def fetch(self, name: str) -> None:
+        """Host -> device through a fresh arena allocation."""
+        host = self._host.pop(name)
+        alloc = self.arena.alloc_elems(host.size, f"offload.{name}")
+        arr = jnp.asarray(host)
+        self.arena.store(alloc, arr)
+        self._device[name] = _Resident(alloc, tuple(host.shape), arr.dtype)
+
+    def drop(self, name: str) -> None:
+        if name in self._device:
+            self.arena.free(self._device.pop(name).alloc)
+        self._host.pop(name, None)
+
+    # ------------------------------------------------------------------
+    def is_resident(self, name: str) -> bool:
+        return name in self._device
+
+    def names(self):
+        return set(self._device) | set(self._host)

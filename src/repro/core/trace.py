@@ -1,0 +1,462 @@
+"""Allocation traces: recording, synthesis from model configs, and replay.
+
+The paper evaluates allocators by running LLM fine-tuning under strategy
+combinations (L = LoRA, R = recomputation, O = offload) on ZeRO-sharded
+multi-GPU setups and measuring fragmentation. We reproduce that pipeline by
+synthesising the *allocator-visible* event stream of one rank from first
+principles (exact tensor inventory of the model config x the strategy's
+lifetime rules), then replaying it through both allocators over the device
+model. The serving engine and offload manager also emit real traces through
+``TraceRecorder`` so framework-level behaviour can be replayed identically.
+
+Structure of one synthetic training iteration (rank 0 of ``world`` GPUs):
+
+  forward:   [ZeRO-3: all-gather full layer params (transient)]
+             workspaces (sizes cycle across iterations -> irregularity)
+             activations (full set, or checkpoint-only under R)
+             logits at the end (large, short-lived)
+  backward:  [ZeRO-3: re-gather params], recompute under R (re-alloc + free
+             the intra-layer activations), transient full grads ->
+             reduce-scattered shards (persist to step), LoRA keeps only
+             adapter grads
+  step:      [O: staging buffers for CPU<->GPU shard swaps], frees shards
+
+This matches the paper's observation (Fig. 5): richer strategies => more
+and smaller allocations => fragmentation for the splitting allocator.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .caching_allocator import AllocatorOOM
+from .chunks import GB, MB, VMMDevice
+from .metrics import ReplayResult
+
+BF16 = 2
+FP32 = 4
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+ALLOC, FREE, MARK = "alloc", "free", "mark"
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    op: str
+    tid: int
+    size: int = 0
+    label: str = ""
+
+
+@dataclass
+class Trace:
+    events: List[TraceEvent] = field(default_factory=list)
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def __len__(self):
+        return len(self.events)
+
+    @property
+    def n_allocs(self) -> int:
+        return sum(1 for e in self.events if e.op == ALLOC)
+
+    @property
+    def mean_alloc_mb(self) -> float:
+        sizes = [e.size for e in self.events if e.op == ALLOC]
+        return (sum(sizes) / len(sizes) / MB) if sizes else 0.0
+
+
+class TraceRecorder:
+    """Incremental trace builder used by the generators and by the real
+    framework components (serving engine, offload manager)."""
+
+    def __init__(self, **meta):
+        self.trace = Trace(meta=dict(meta))
+        self._next_tid = itertools.count()
+        self.live: Dict[int, int] = {}
+
+    def alloc(self, size: int, label: str = "") -> int:
+        assert size > 0, f"alloc of size {size}"
+        tid = next(self._next_tid)
+        self.live[tid] = size
+        self.trace.events.append(TraceEvent(ALLOC, tid, int(size), label))
+        return tid
+
+    def free(self, tid: int) -> None:
+        del self.live[tid]
+        self.trace.events.append(TraceEvent(FREE, tid))
+
+    def mark(self, label: str) -> None:
+        self.trace.events.append(TraceEvent(MARK, -1, 0, label))
+
+    def free_all(self) -> None:
+        for tid in list(self.live):
+            self.free(tid)
+
+
+# ---------------------------------------------------------------------------
+# model descriptors (paper's benchmark table + hooks for assigned archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelDesc:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+
+    @property
+    def kv_dim(self) -> int:
+        return self.d_model // self.n_heads * self.n_kv
+
+    def layer_param_tensors(self) -> List[int]:
+        """Per-layer weight tensor sizes in bytes (bf16)."""
+        d, ff, kv = self.d_model, self.d_ff, self.kv_dim
+        return [
+            d * (d + 2 * kv) * BF16,  # fused qkv
+            d * d * BF16,  # attn out proj
+            d * ff * BF16,  # mlp up
+            ff * d * BF16,  # mlp down
+        ]
+
+    @property
+    def layer_param_bytes(self) -> int:
+        return sum(self.layer_param_tensors())
+
+    @property
+    def embed_bytes(self) -> int:
+        return self.vocab * self.d_model * BF16
+
+    @property
+    def param_bytes(self) -> int:
+        return self.n_layers * self.layer_param_bytes + self.embed_bytes
+
+
+#: The paper's Table 2 models (public configs).
+PAPER_MODELS: Dict[str, ModelDesc] = {
+    m.name: m
+    for m in [
+        ModelDesc("opt-1.3b", 24, 2048, 32, 32, 8192, 50272),
+        ModelDesc("gpt2-1.5b", 48, 1600, 25, 25, 6400, 50257),
+        ModelDesc("glm-10b", 48, 4096, 64, 64, 16384, 150528),
+        ModelDesc("opt-13b", 40, 5120, 40, 40, 20480, 50272),
+        ModelDesc("vicuna-13b", 40, 5120, 40, 40, 13824, 32000),
+        ModelDesc("gpt-neox-20b", 44, 6144, 64, 64, 24576, 50432),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# synthetic fine-tuning trace generator
+# ---------------------------------------------------------------------------
+
+#: sequence-length bucket multipliers cycled across iterations. Fine-tuning
+#: datasets are length-bucketed, so the token count per step cycles through a
+#: small set of values; this is the "dynamicity" the paper blames for
+#: fragmentation (§2.3) and its cycle length is why GMLake "converges after
+#: ~4 iterations" (Fig. 14): after one full cycle every request size has been
+#: seen and S1 always hits.
+_SEQ_BUCKETS = (1.0, 0.625, 1.25, 0.8125)
+
+
+def training_trace(
+    model: ModelDesc,
+    strategies: str = "",
+    world: int = 1,
+    batch: int = 8,
+    seq: int = 2048,
+    iters: int = 8,
+    platform: str = "deepspeed",
+    zero_stage: int = 3,
+    lora_rank: int = 16,
+    prefetch: int = 1,
+    seed: int = 0,
+) -> Trace:
+    """Synthesise the rank-0 allocator event stream for one fine-tuning run.
+
+    ``strategies``: subset of "LRO". ``platform``: deepspeed (per-param
+    ZeRO-3 gathers, prefetch overlap) | fsdp (one flat gather per layer) |
+    colossal (fixed 64 MB chunk gathers). ``world == 1`` disables
+    sharding/gathers. ``prefetch``: how many upcoming layers' parameter
+    gathers are held live simultaneously (DeepSpeed prefetching) — this
+    makes frees non-LIFO, a key fragmentation driver.
+    """
+    L, R, O = "L" in strategies, "R" in strategies, "O" in strategies
+    rng = random.Random(seed)
+    rec = TraceRecorder(
+        model=model.name, strategies=strategies, world=world, batch=batch,
+        seq=seq, iters=iters, platform=platform,
+    )
+    d, ff, nl, v = model.d_model, model.d_ff, model.n_layers, model.vocab
+
+    sharded = world > 1 and zero_stage >= 3
+    shard = lambda b: max(b // world, 1)  # noqa: E731
+
+    # persistent state: parameters (+ optimizer state unless offloaded/LoRA)
+    for li in range(nl):
+        for t in model.layer_param_tensors():
+            rec.alloc(shard(t) if sharded else t, f"param.L{li}")
+    rec.alloc(shard(model.embed_bytes) if sharded else model.embed_bytes, "embed")
+    trainable_layer_tensors = (
+        # LoRA adapters: rank decomposition per projection, tiny
+        [2 * lora_rank * d * BF16] * 4 if L else model.layer_param_tensors()
+    )
+    if not O:  # optimizer states (m, v, master) live on GPU unless offloaded
+        for li in range(nl):
+            for t in trainable_layer_tensors:
+                n_params = t // BF16
+                opt = n_params * (FP32 * 3)
+                rec.alloc(shard(opt) if sharded and not L else opt, f"opt.L{li}")
+
+    def gathers_for_layer() -> List[int]:
+        if not sharded:
+            return []
+        if platform == "fsdp":
+            return [model.layer_param_bytes]
+        if platform == "colossal":
+            chunk = 64 * MB
+            total = model.layer_param_bytes
+            return [chunk] * (total // chunk) + ([total % chunk] if total % chunk else [])
+        return list(model.layer_param_tensors())  # deepspeed: per-param
+
+    def gather_window(order: Sequence[int], phase: str):
+        """Yields per-layer gather tids, holding ``prefetch`` layers ahead
+        live (DeepSpeed prefetching => non-LIFO frees)."""
+        depth = (prefetch if platform == "deepspeed" else 0) if sharded else 0
+        order = list(order)
+        pending: List[List[int]] = []
+        nxt = 0
+        for j, li in enumerate(order):
+            while nxt <= min(j + depth, len(order) - 1):
+                lay = order[nxt]
+                pending.append(
+                    [rec.alloc(s, f"{phase}_gather.L{lay}") for s in gathers_for_layer()]
+                )
+                nxt += 1
+            cur = pending.pop(0)
+            yield li, cur
+            for t in cur:
+                rec.free(t)
+
+    for it in range(iters):
+        rec.mark(f"iter{it}")
+        bucket = _SEQ_BUCKETS[it % len(_SEQ_BUCKETS)]
+        seq_t = int(seq * bucket)
+        act = batch * seq_t * d * BF16  # residual-stream activation
+        act_ff = batch * seq_t * ff * BF16
+        logits = batch * seq_t * v * BF16
+        ws_sizes = [act, act // 2]
+
+        # in-flight offload staging buffers: freed with a completion delay
+        inflight: List[List[int]] = []
+
+        def drain_inflight(completely: bool = False) -> None:
+            while inflight and (completely or len(inflight) > 2):
+                for t in inflight.pop(0):
+                    rec.free(t)
+
+        # ---------------- forward ----------------
+        acts: List[List[int]] = []
+        rec.alloc(act, "embed_out")
+        fwd = gather_window(range(nl), "fwd") if sharded else ((li, []) for li in range(nl))
+        for li, _g in fwd:
+            ws = [rec.alloc(s, f"ws.L{li}") for s in rng.sample(ws_sizes, len(ws_sizes))]
+            if R:
+                acts.append([rec.alloc(act, f"ckpt.L{li}")])
+            else:
+                acts.append([
+                    rec.alloc(act, f"attn_in.L{li}"),
+                    rec.alloc(act, f"attn_out.L{li}"),
+                    rec.alloc(act_ff, f"mlp_h.L{li}"),
+                    rec.alloc(act, f"mlp_out.L{li}"),
+                ])
+            for t in ws:
+                rec.free(t)
+        lg = rec.alloc(logits, "logits")
+        loss_ws = rec.alloc(logits // 2, "loss_ws")
+        rec.free(loss_ws)
+
+        # ---------------- backward ----------------
+        dlg = rec.alloc(logits, "dlogits")
+        rec.free(lg)
+        dx = rec.alloc(act, "dact")
+        rec.free(dlg)
+        grad_shards: List[int] = []
+        bwd = (
+            gather_window(reversed(range(nl)), "bwd")
+            if sharded
+            else ((li, []) for li in reversed(range(nl)))
+        )
+        for li, _g in bwd:
+            recomputed = []
+            if R:  # re-run forward of the layer
+                recomputed = [
+                    rec.alloc(act, f"re.attn_in.L{li}"),
+                    rec.alloc(act, f"re.attn_out.L{li}"),
+                    rec.alloc(act_ff, f"re.mlp_h.L{li}"),
+                    rec.alloc(act, f"re.mlp_out.L{li}"),
+                ]
+            ws = rec.alloc(act_ff, f"bwd_ws.L{li}")
+            # parameter gradients
+            if L:
+                for t in trainable_layer_tensors:
+                    grad_shards.append(rec.alloc(t, f"lora_grad.L{li}"))
+            else:
+                full = [rec.alloc(t, f"grad.L{li}") for t in model.layer_param_tensors()]
+                if sharded:
+                    for t, sz in zip(full, model.layer_param_tensors()):
+                        grad_shards.append(rec.alloc(shard(sz), f"gshard.L{li}"))
+                        rec.free(t)
+                else:
+                    grad_shards.extend(full)
+                if O and not L:
+                    # ZeRO-Offload: grad shards stream to CPU during backward;
+                    # staging buffers complete asynchronously (delayed frees)
+                    inflight.append(
+                        [rec.alloc(shard(t) if sharded else t, f"grad_stage.L{li}")
+                         for t in model.layer_param_tensors()]
+                    )
+                    drain_inflight()
+            ndx = rec.alloc(act, f"dact.L{li}")
+            rec.free(dx)
+            dx = ndx
+            rec.free(ws)
+            for t in recomputed:
+                rec.free(t)
+            for t in acts[li]:
+                rec.free(t)
+        rec.free(dx)
+        drain_inflight(completely=True)
+
+        # ---------------- optimizer step ----------------
+        if O:
+            # updated parameters stream back from CPU: transient staging
+            for li in range(nl):
+                for t in trainable_layer_tensors:
+                    inflight.append([rec.alloc(shard(t) if sharded and not L else t, f"p_stage.L{li}")])
+                    drain_inflight()
+            drain_inflight(completely=True)
+        else:
+            step_ws = rec.alloc(ws_sizes[0], "step_ws")
+            rec.free(step_ws)
+        for t in grad_shards:
+            rec.free(t)
+
+    rec.mark("end")
+    return rec.trace
+
+
+def inference_trace(
+    model: ModelDesc,
+    n_requests: int = 64,
+    max_new: int = 128,
+    batch: int = 8,
+    seed: int = 0,
+) -> Trace:
+    """Continuous-batching KV-cache churn: variable-length sequences arrive,
+    grow, and retire — the serving-side fragmentation workload."""
+    rng = random.Random(seed)
+    rec = TraceRecorder(model=model.name, kind="serve", n_requests=n_requests)
+    per_tok = 2 * model.kv_dim * model.n_layers * BF16  # K+V per token
+    live: List[Tuple[int, int]] = []  # (tid, remaining steps)
+    for r in range(n_requests):
+        prompt = rng.randint(64, 4096)
+        kv = rec.alloc(prompt * per_tok, f"kv.r{r}")
+        live.append((kv, rng.randint(8, max_new)))
+        # decode steps: grow some sequences by reallocating their KV block
+        step_done = []
+        for i, (tid, rem) in enumerate(live):
+            if rem <= 0:
+                step_done.append(i)
+                continue
+            live[i] = (tid, rem - rng.randint(1, 8))
+        for i in reversed(step_done):
+            rec.free(live[i][0])
+            live.pop(i)
+        if len(live) > batch:  # retire oldest past batch budget
+            tid, _ = live.pop(0)
+            rec.free(tid)
+    for tid, _ in live:
+        rec.free(tid)
+    return rec.trace
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+
+
+def replay(
+    trace: Trace,
+    allocator,
+    stop_on_oom: bool = True,
+    check_invariants_every: int = 0,
+) -> ReplayResult:
+    """Feed a trace through an allocator; returns metrics + cost + wall time."""
+    live: Dict[int, object] = {}
+    oom = False
+    oom_at = None
+    marks: List[Tuple[str, dict]] = []
+    t0 = time.perf_counter()
+    for i, ev in enumerate(trace.events):
+        try:
+            if ev.op == ALLOC:
+                live[ev.tid] = allocator.malloc(ev.size)
+            elif ev.op == FREE:
+                alloc = live.pop(ev.tid, None)
+                if alloc is not None:  # may have been dropped after OOM
+                    allocator.free(alloc)
+            else:
+                counts = getattr(allocator, "state_counts", None)
+                marks.append((ev.label, dict(counts) if counts else {}))
+        except AllocatorOOM:
+            oom = True
+            oom_at = i
+            if stop_on_oom:
+                break
+        if check_invariants_every and i % check_invariants_every == 0:
+            allocator.check_invariants()
+    wall = time.perf_counter() - t0
+    return ReplayResult(
+        name=allocator.name,
+        stats=allocator.stats,
+        model_cost=allocator.device.ledger.total,
+        wall_seconds=wall,
+        oom=oom,
+        oom_at_event=oom_at,
+        state_counts=dict(getattr(allocator, "state_counts", {})) or None,
+    ), marks
+
+
+def run_workload(
+    trace: Trace,
+    allocator_name: str,
+    capacity_bytes: int = 80 * GB,
+    record_timeline: bool = False,
+    **alloc_kwargs,
+) -> ReplayResult:
+    """Convenience: fresh device + allocator, replay, return result."""
+    from .gmlake import GMLakeAllocator
+    from .caching_allocator import CachingAllocator, NativeAllocator
+
+    device = VMMDevice(capacity_bytes)
+    cls = {
+        "gmlake": GMLakeAllocator,
+        "caching": CachingAllocator,
+        "native": NativeAllocator,
+    }[allocator_name]
+    allocator = cls(device, record_timeline=record_timeline, **alloc_kwargs)
+    result, _ = replay(trace, allocator)
+    return result

@@ -1,0 +1,1 @@
+"""Data: deterministic, shardable, resumable synthetic pipelines."""

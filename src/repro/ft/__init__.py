@@ -1,0 +1,1 @@
+"""Fault tolerance: supervisor, stragglers, restart/elasticity."""

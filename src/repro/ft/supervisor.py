@@ -1,0 +1,156 @@
+"""Fault-tolerance supervisor: checkpoint/restart, stragglers, elasticity.
+
+Designed for fleets where any step can throw (preempted host, ICI link
+flap, data corruption). The supervisor wraps the train loop:
+
+  * **checkpoint/restart** — periodic async checkpoints; on failure the
+    loop resumes from the last committed step (restart budget bounds crash
+    loops),
+  * **straggler detection** — per-step wall times feed a rolling median;
+    steps slower than ``straggler_factor`` x median raise a
+    ``StragglerEvent`` to the policy hook (log / re-shard / evict host).
+    The clock is injectable so policies are unit-testable,
+  * **elastic re-mesh** — on world-size change the caller rebuilds the mesh
+    and restores the latest checkpoint re-sharded to it
+    (``CheckpointManager.restore(shardings=new)``) — no fixed-world
+    assumption anywhere in the state layout.
+"""
+
+from __future__ import annotations
+
+import logging
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from ..ckpt.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.ft")
+
+
+class StragglerEvent(RuntimeError):
+    def __init__(self, step: int, elapsed: float, median: float):
+        super().__init__(
+            f"step {step} took {elapsed:.3f}s vs median {median:.3f}s"
+        )
+        self.step, self.elapsed, self.median = step, elapsed, median
+
+
+@dataclass
+class StragglerDetector:
+    """Rolling-median step-time monitor with an injectable clock."""
+
+    factor: float = 3.0
+    window: int = 32
+    warmup: int = 4
+    clock: Callable[[], float] = time.monotonic
+    times: List[float] = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> Optional[StragglerEvent]:
+        assert self._t0 is not None, "stop() without start()"
+        elapsed = self.clock() - self._t0
+        self._t0 = None
+        ev = None
+        if len(self.times) >= self.warmup:
+            med = statistics.median(self.times)
+            if elapsed > self.factor * med:
+                ev = StragglerEvent(step, elapsed, med)
+        self.times.append(elapsed)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return ev
+
+
+@dataclass
+class SupervisorConfig:
+    checkpoint_every: int = 100
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    #: "log" (record + continue) | "raise" (escalate to restart logic)
+    straggler_policy: str = "log"
+
+
+class Supervisor:
+    """Drives ``step_fn`` with checkpoint/restart + straggler handling.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be pure (restarts
+    re-enter it with restored state). ``batch_iter(step)`` must be
+    deterministic in ``step`` so restarts replay the exact stream.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        batch_iter: Callable[[int], Any],
+        ckpt: CheckpointManager,
+        config: SupervisorConfig = SupervisorConfig(),
+        clock: Callable[[], float] = time.monotonic,
+        state_shardings: Any = None,
+    ):
+        self.step_fn = step_fn
+        self.batch_iter = batch_iter
+        self.ckpt = ckpt
+        self.config = config
+        self.detector = StragglerDetector(factor=config.straggler_factor, clock=clock)
+        self.state_shardings = state_shardings
+        self.events: List[Dict] = []  # audit log: restarts, stragglers
+
+    def run(self, state: Any, start_step: int, n_steps: int,
+            fail_injector: Optional[Callable[[int], None]] = None):
+        """Returns (final_state, history). Restores + retries on failure."""
+        restarts = 0
+        step = start_step
+        history: List[Dict] = []
+        while step < start_step + n_steps:
+            try:
+                batch = self.batch_iter(step)
+                self.detector.start()
+                if fail_injector is not None:
+                    fail_injector(step)
+                state, metrics = self.step_fn(state, batch)
+                ev = self.detector.stop(step)
+                if ev is not None:
+                    self.events.append({"kind": "straggler", "step": step,
+                                        "elapsed": ev.elapsed, "median": ev.median})
+                    if self.config.straggler_policy == "raise":
+                        raise ev
+                history.append({"step": step, **jax_to_float(metrics)})
+                step += 1
+                if step % self.config.checkpoint_every == 0:
+                    self.ckpt.save_async(step, state)
+            except (StragglerEvent, RuntimeError, OSError) as e:
+                restarts += 1
+                self.events.append({"kind": "restart", "step": step,
+                                    "error": repr(e), "restart": restarts})
+                if restarts > self.config.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted ({restarts - 1}) at step {step}"
+                    ) from e
+                self.ckpt.wait()
+                last = self.ckpt.latest_step()
+                if last is None:
+                    log.warning("no checkpoint yet; restarting from step %d", start_step)
+                    step = start_step
+                    continue
+                log.warning("restoring step %d after failure at step %d", last, step)
+                state = self.ckpt.restore(state, step=last,
+                                          shardings=self.state_shardings)
+                step = last
+        self.ckpt.wait()
+        self.ckpt.save(step, state)
+        return state, history
+
+
+def jax_to_float(metrics: Dict) -> Dict:
+    out = {}
+    for k, v in metrics.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            out[k] = v
+    return out

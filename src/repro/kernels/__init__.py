@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (stitch gather/scatter, stitched decode attention)
+with jit wrappers (ops) and pure-jnp oracles (ref)."""

@@ -1,0 +1,104 @@
+"""Stitched gather/scatter Pallas kernels — the TPU analogue of cuMemMap.
+
+On GPU, GMLake's stitch re-maps page tables so a virtually-contiguous tensor
+reads non-contiguous physical chunks for free. TPUs have no user page tables,
+so the indirection moves into the kernel: a scalar-prefetched ``chunk_map``
+(logical chunk -> physical chunk id) drives the ``BlockSpec`` index map, and
+the DMA engine resolves the stitch at full HBM bandwidth (chunks are 2 MB —
+far above the ~512 B threshold below which TPU DMA efficiency degrades).
+
+Both kernels are pure data movement: the grid iterates logical chunks, the
+index map aliases each grid step to its physical chunk. ``stitch_scatter``
+aliases the arena in/out (``input_output_aliases``) so untouched chunks are
+preserved without copying the whole arena.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Lane-friendly chunk layout: (sublane, lane) = (8k, 128) tiles. One arena
+# chunk is a row of ``chunk_elems`` elements, viewed 2-D for VMEM tiling.
+LANE = 128
+
+
+def _copy_kernel(chunk_map_ref, src_ref, dst_ref):
+    """One grid step: move one chunk. The BlockSpec index maps do the work."""
+    del chunk_map_ref  # consumed by the index maps via scalar prefetch
+    dst_ref[...] = src_ref[...]
+
+
+def stitch_gather(
+    arena: jax.Array,  # (n_phys_chunks, chunk_elems)
+    chunk_map: jax.Array,  # (n_logical_chunks,) int32: logical -> physical
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gather logical chunks out of the arena: out[i] = arena[chunk_map[i]]."""
+    n_logical = chunk_map.shape[0]
+    chunk_elems = arena.shape[1]
+    assert chunk_elems % LANE == 0, f"chunk_elems {chunk_elems} not lane-aligned"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_logical,),
+        in_specs=[
+            pl.BlockSpec((1, chunk_elems), lambda i, cmap: (cmap[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk_elems), lambda i, cmap: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_logical, chunk_elems), arena.dtype),
+        interpret=interpret,
+    )(chunk_map, arena)
+
+
+def stitch_scatter(
+    arena: jax.Array,  # (n_phys_chunks, chunk_elems)
+    chunk_map: jax.Array,  # (n_logical_chunks,) int32: logical -> physical
+    values: jax.Array,  # (n_logical_chunks, chunk_elems)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter logical chunks into the arena: arena[chunk_map[i]] = values[i].
+
+    The arena is aliased in/out, so this lowers to an in-place chunk-granular
+    DMA — the write-side of the stitch.
+    """
+    n_logical = chunk_map.shape[0]
+    chunk_elems = arena.shape[1]
+    assert values.shape == (n_logical, chunk_elems)
+    assert values.dtype == arena.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_logical,),
+        in_specs=[
+            pl.BlockSpec((1, chunk_elems), lambda i, cmap: (i, 0)),
+            # the arena input is only aliased, never read by the kernel:
+            # keep it out of the VMEM pipeline entirely
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, chunk_elems), lambda i, cmap: (cmap[i], 0)),
+    )
+
+    def _scatter_kernel(chunk_map_ref, val_ref, arena_in_ref, arena_out_ref):
+        del chunk_map_ref, arena_in_ref
+        arena_out_ref[...] = val_ref[...]
+
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        # alias indices count the scalar-prefetch operand: 0=chunk_map,
+        # 1=values, 2=arena -> output 0
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(chunk_map, values, arena)

@@ -1,0 +1,159 @@
+"""Stitched decode attention: flash-decoding directly over the KV arena.
+
+The serving engine stores each sequence's KV history as a GMLake allocation —
+physically scattered 2 MB chunks made virtually contiguous by an extent
+table. This kernel is the consumer side: decode attention for one new token
+per sequence, reading K/V straight out of the arena through the per-sequence
+page table (no gather materialisation), with the numerically-stable
+flash-decoding running max/sum accumulated across chunks in VMEM scratch.
+
+Layout: the arena is token-structured, ``(n_phys_chunks, T_c, KVH, D)``
+(T_c tokens per 2 MB chunk). Grid = (batch, chunks-per-seq); the chunk axis
+is minor, so scratch carries (m, l, acc) across a sequence's chunks and the
+output block is written once on the last chunk.
+
+GQA handled natively: q heads are grouped ``(KVH, G, D)`` so scores are a
+batched matmul over kv-heads — MXU-shaped, no head replication in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+
+
+def _decode_attn_kernel(
+    # scalar prefetch
+    page_table_k_ref,  # (B, C) int32
+    page_table_v_ref,  # (B, C) int32
+    seq_lens_ref,  # (B,) int32
+    # inputs
+    q_ref,  # (1, KVH, G, D)
+    k_ref,  # (1, T_c, KVH, D)
+    v_ref,  # (1, T_c, KVH, D)
+    # outputs
+    o_ref,  # (1, KVH, G, D)
+    # scratch
+    m_ref,  # (KVH, G) f32
+    l_ref,  # (KVH, G) f32
+    acc_ref,  # (KVH, G, D) f32
+    *,
+    chunk_tokens: int,
+    n_chunks: int,
+):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    seq_len = seq_lens_ref[b]
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # positions covered by this chunk; mask beyond the sequence length
+    base = c * chunk_tokens
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (chunk_tokens,), 0)
+    valid = pos < seq_len
+
+    @pl.when(base < seq_len)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)  # (KVH, G, D)
+        k = k_ref[0].astype(jnp.float32)  # (T_c, KVH, D)
+        v = v_ref[0].astype(jnp.float32)  # (T_c, KVH, D)
+        # scores: batched over kv heads -> (KVH, G, T_c)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+        )
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])  # (KVH, G, T_c)
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+        )  # (KVH, G, D)
+        acc_ref[...] = alpha[..., None] * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(c == n_chunks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe_l[..., None]).astype(o_ref.dtype)
+
+
+def stitched_decode_attention(
+    q: jax.Array,  # (B, H, D)
+    k_arena: jax.Array,  # (n_phys, T_c, KVH, D)
+    v_arena: jax.Array,  # (n_phys, T_c, KVH, D)
+    page_table: jax.Array,  # (B, C) int32, physical chunk per logical chunk
+    seq_lens: jax.Array,  # (B,) int32
+    *,
+    page_table_v: jax.Array | None = None,  # defaults to sharing page_table
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention over the stitched KV arena. Returns (B, H, D).
+
+    K and V may live in the same arena buffer under different page tables
+    (pass the buffer twice + ``page_table_v``), or in separate buffers under
+    one shared table.
+    """
+    batch, n_heads, head_dim = q.shape
+    n_phys, chunk_tokens, n_kv, head_dim_k = k_arena.shape
+    assert head_dim == head_dim_k and v_arena.shape == k_arena.shape
+    assert n_heads % n_kv == 0, f"GQA needs H % KVH == 0, got {n_heads} % {n_kv}"
+    group = n_heads // n_kv
+    n_chunks = page_table.shape[1]
+    assert page_table.shape == (batch, n_chunks)
+    if page_table_v is None:
+        page_table_v = page_table
+    assert page_table_v.shape == page_table.shape
+
+    scale = (head_dim**-0.5) if scale is None else scale
+    q4 = (q * scale).reshape(batch, n_kv, group, head_dim)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(batch, n_chunks),
+        in_specs=[
+            pl.BlockSpec(
+                (1, n_kv, group, head_dim), lambda b, c, ptk, ptv, sl: (b, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, chunk_tokens, n_kv, head_dim),
+                lambda b, c, ptk, ptv, sl: (ptk[b, c], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, chunk_tokens, n_kv, head_dim),
+                lambda b, c, ptk, ptv, sl: (ptv[b, c], 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, n_kv, group, head_dim), lambda b, c, ptk, ptv, sl: (b, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, group), jnp.float32),
+            pltpu.VMEM((n_kv, group), jnp.float32),
+            pltpu.VMEM((n_kv, group, head_dim), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, chunk_tokens=chunk_tokens, n_chunks=n_chunks
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n_kv, group, head_dim), q.dtype),
+        interpret=interpret,
+    )(page_table, page_table_v, seq_lens, q4, k_arena, v_arena)
+    return out.reshape(batch, n_heads, head_dim)

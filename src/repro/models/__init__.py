@@ -1,0 +1,9 @@
+"""Model zoo: one module per family, uniform API via ``api.family_of``."""
+
+from . import api, layers, mamba2, moe, paligemma, rwkv6, transformer, whisper, zamba2
+from .api import FAMILIES, Family, family_of
+
+__all__ = [
+    "api", "layers", "mamba2", "moe", "paligemma", "rwkv6", "transformer",
+    "whisper", "zamba2", "FAMILIES", "Family", "family_of",
+]

@@ -1,0 +1,198 @@
+"""Mamba2 mixer (SSD — state-space duality, chunked parallel form).
+
+The sequence dimension is processed in chunks: within-chunk contributions
+use the quadratic "attention-like" dual form, cross-chunk state is carried
+by a ``lax.scan`` — O(S·Q) work, O(1)-in-S live memory, and a single-token
+recurrence path for decode. Used standalone and inside zamba2.
+
+Shapes: B batch, S seq, H heads, P head dim, N state dim, Q chunk length.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_p: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_p
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def block_init(cfg: Mamba2Config, key, n_layers: int, dtype=jnp.float32) -> Dict:
+    """Stacked (n_layers, ...) params for one mamba2 mixer."""
+    ks = jax.random.split(key, 4)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(ks[0], (n_layers, d, proj_out), in_axis=1, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (n_layers, cfg.d_conv, cfg.conv_channels))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((n_layers, cfg.conv_channels), dtype),
+        "A_log": jnp.zeros((n_layers, h), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((n_layers, h), jnp.float32),
+        "dt_bias": jnp.full((n_layers, h), -1.0, jnp.float32),
+        "norm": jnp.ones((n_layers, di), dtype),
+        "out_proj": L.dense_init(ks[2], (n_layers, di, d), in_axis=1, dtype=dtype),
+    }
+
+
+def block_axes(cfg: Mamba2Config) -> Dict:
+    return {
+        "in_proj": ("layers", "embed", "inner_proj"),
+        "conv_w": ("layers", None, "inner_conv"),
+        "conv_b": ("layers", "inner_conv"),
+        "A_log": ("layers", "ssm_heads"),
+        "D": ("layers", "ssm_heads"),
+        "dt_bias": ("layers", "ssm_heads"),
+        "norm": ("layers", "inner"),
+        "out_proj": ("layers", "inner", "embed"),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: Mamba2Config, w, b, xbc):
+    """Depthwise causal conv via explicit shifts (kernel <= 4)."""
+    out = jnp.zeros_like(xbc)
+    for i in range(cfg.d_conv):
+        shift = cfg.d_conv - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(cfg, x, dt, A, Bm, Cm):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H), A (H,) negative, Bm/Cm (B,S,N).
+    Returns y (B,S,H,P), final state (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = cfg.chunk
+    while s % q:
+        q //= 2
+    c = s // q
+
+    xc = x.reshape(b, c, q, h, p)
+    dtc = dt.reshape(b, c, q, h)
+    bc = Bm.reshape(b, c, q, n)
+    cc = Cm.reshape(b, c, q, n)
+
+    def chunk_step(hstate, inputs):
+        xq, dtq, bq, cq = inputs  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        la = dtq * A  # log decay per step (B,Q,H), <= 0
+        cum = jnp.cumsum(la, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: Lmat[t,s] = exp(cum_t - cum_s) for s<=t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        g = jnp.einsum("btn,bsn->bts", cq, bq)  # (B,Q,Q)
+        xdt = xq * dtq[..., None]  # (B,Q,H,P)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", g, lmat, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", cq, hstate
+        )
+        # state update
+        total = cum[:, -1]  # (B,H)
+        suffix = jnp.exp(total[:, None] - cum)  # (B,Q,H)
+        h_new = jnp.exp(total)[..., None, None] * hstate + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xdt, bq, suffix
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    inputs = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (xc, dtc, bc, cc))
+    hf, yc = jax.lax.scan(chunk_step, h0, inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, hf
+
+
+def apply_block(cfg: Mamba2Config, p: Dict, x: jax.Array) -> jax.Array:
+    """Full mamba2 mixer over a sequence. x (B, S, d_model)."""
+    b, s, _ = x.shape
+    h, pp, n = cfg.n_heads, cfg.head_p, cfg.d_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(cfg, p["conv_w"], p["conv_b"], xbc)
+    xi = xbc[..., : cfg.d_inner].reshape(b, s, h, pp)
+    bm = xbc[..., cfg.d_inner : cfg.d_inner + n]
+    cm = xbc[..., cfg.d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    y, _ = _ssd_chunked(cfg, xi.astype(jnp.float32), dt, a, bm.astype(jnp.float32),
+                        cm.astype(jnp.float32))
+    y = y + p["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token recurrence)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_p, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_channels), dtype),
+    }
+
+
+def state_axes(cfg: Mamba2Config) -> Dict:
+    return {"ssm": ("batch", "ssm_heads", None, None), "conv": ("batch", None, "inner_conv")}
+
+
+def decode_block(cfg: Mamba2Config, p: Dict, state: Dict, x: jax.Array):
+    """One token. x (B, d_model) -> (out (B, d_model), new state)."""
+    b = x.shape[0]
+    h, pp, n = cfg.n_heads, cfg.head_p, cfg.d_state
+    zxbcdt = jnp.einsum("bd,dk->bk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B, K, Ch)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    xi = conv_out[..., : cfg.d_inner].reshape(b, h, pp).astype(jnp.float32)
+    bm = conv_out[..., cfg.d_inner : cfg.d_inner + n].astype(jnp.float32)
+    cm = conv_out[..., cfg.d_inner + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+    ssm = a[..., None, None] * state["ssm"] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xi, bm, dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cm) + p["D"][None, :, None] * xi
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])
+    return out, {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,85 @@
+"""PaliGemma-style VLM: gemma backbone + image-patch prefix (SigLIP stub).
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+delivers precomputed patch embeddings (B, n_patches, d_model). The text
+backbone is gemma-flavoured (rmsnorm, gated gelu, embedding scaling, MQA
+kv=1) run as a prefix-LM: bidirectional attention over the patch prefix,
+causal over text.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+from .transformer import Sharder, _id_sharder
+
+
+@dataclass(frozen=True)
+class PaliGemmaConfig(T.TransformerConfig):
+    n_patches: int = 256
+
+    @property
+    def n_params(self) -> int:
+        return super().n_params  # patch projector is stubbed upstream
+
+
+def make_config(name: str, **kw) -> PaliGemmaConfig:
+    defaults = dict(
+        norm="rmsnorm", act="gelu", gated=True, tie_embeddings=True,
+        embed_scale=True, prefix_lm=True,
+    )
+    defaults.update(kw)
+    return PaliGemmaConfig(name=name, **defaults)
+
+
+init_params = T.init_params
+param_axes = T.param_axes
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+
+def _embed_multimodal(cfg, params, batch):
+    """concat(patch prefix, text embeddings) -> (B, P+S_text, d)."""
+    patches = batch["patch_embeds"].astype(cfg.dtype)  # (B, P, d)
+    text = T.embed_tokens(cfg, params, batch["tokens"])  # (B, S_text, d)
+    return jnp.concatenate([patches, text], axis=1)
+
+
+def loss_fn(cfg: PaliGemmaConfig, params, batch, sharder: Sharder = _id_sharder):
+    """Next-token loss on the text suffix only."""
+    x = _embed_multimodal(cfg, params, batch)
+    b, s, _ = x.shape
+    p = batch["patch_embeds"].shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = sharder(x, ("batch", None, "embed"))
+    h, _ = T.forward(cfg, params, x, positions, prefix_len=p, sharder=sharder)
+    # positions p-1 .. s-2 predict text tokens 0 .. S_text-1? tokens[0] is
+    # given (BOS-style); predict tokens[1:] from positions p .. s-2
+    logits = T.logits_from_hidden(cfg, params, h[:, p:-1])
+    return L.softmax_xent(logits, batch["tokens"][:, 1:], batch.get("loss_mask"))
+
+
+def prefill(cfg, params, batch, cache, sharder: Sharder = _id_sharder):
+    """Multimodal prompt -> cache. batch: patch_embeds + tokens."""
+    x = _embed_multimodal(cfg, params, batch)
+    b, s, _ = x.shape
+    p = batch["patch_embeds"].shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, kvs = T.forward(cfg, params, x, positions, prefix_len=p, sharder=sharder,
+                       collect_kv=True)
+    k, v = kvs
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cfg.dtype), (0,) * 5),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cfg.dtype), (0,) * 5),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return T.logits_from_hidden(cfg, params, h[:, -1:]), cache
+
+
+decode_step = T.decode_step  # past the prefix, decode is plain causal

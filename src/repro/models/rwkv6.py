@@ -1,0 +1,373 @@
+"""RWKV6 "Finch": linear-attention RNN with data-dependent per-channel decay.
+
+Each layer = time-mix (the WKV6 recurrence) + channel-mix (token-shift MLP).
+The WKV6 state is S (H, Dk, Dv); per step:
+
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), data-dependent)
+    y_t = r_t · (S_{t-1} + Diag(u) k_t v_t^T)
+
+Training/prefill uses a chunked parallel form (cumulative log-decay within
+chunks + scanned cross-chunk state); decode is the O(1) recurrence. All
+decay exponents are differences of a cumsum of log w <= 0, so every exp()
+argument is <= 0 — numerically safe.
+
+This arch is attention-free: the paper's KV-stitching client is N/A (noted
+in DESIGN.md §Arch-applicability); GMLake still backs its offload/state
+arenas. ``long_500k`` decode is O(1) in history length.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import Sharder, _id_sharder
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    name: str
+    n_layers: int = 32
+    d_model: int = 4096
+    d_ff: int = 14336
+    vocab: int = 65536
+    head_size: int = 64
+    decay_lora: int = 64
+    #: WKV6 chunk: the factored within-chunk form carries exp(-cumsum(log w))
+    #: whose exponent is bounded by chunk * DECAY_EXP_CAP — 16 * 5 = 80 < 88
+    #: (f32 overflow), so 16 is the largest numerically-safe chunk.
+    chunk: int = 16
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_size
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ff
+        tm = 4 * d * d + 2 * d * self.decay_lora + 6 * d + self.n_heads * self.head_size
+        cm = 2 * d * f + d * d + 2 * d
+        per_layer = tm + cm + 4 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + 2 * d
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: RWKV6Config, key) -> Dict:
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.decay_lora
+    nl = cfg.n_layers
+    ks = jax.random.split(key, 16)
+    tm = {
+        # token-shift mixing coefficients per projection
+        "mu_r": jnp.full((nl, d), 0.5, cfg.dtype),
+        "mu_k": jnp.full((nl, d), 0.5, cfg.dtype),
+        "mu_v": jnp.full((nl, d), 0.5, cfg.dtype),
+        "mu_w": jnp.full((nl, d), 0.5, cfg.dtype),
+        "mu_g": jnp.full((nl, d), 0.5, cfg.dtype),
+        "wr": L.dense_init(ks[0], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+        "wk": L.dense_init(ks[1], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+        "wv": L.dense_init(ks[2], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+        "wg": L.dense_init(ks[3], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+        "wo": L.dense_init(ks[4], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((nl, d), -1.0, jnp.float32),
+        "wA": L.dense_init(ks[5], (nl, d, r), in_axis=1, dtype=cfg.dtype),
+        "wB": (jax.random.normal(ks[6], (nl, r, d)) * 0.01).astype(cfg.dtype),
+        "u": (jax.random.normal(ks[7], (nl, d)) * 0.1).astype(jnp.float32),  # bonus
+        "ln_x": jnp.ones((nl, d), cfg.dtype),  # per-head group norm scale
+    }
+    cm = {
+        "mu_k": jnp.full((nl, d), 0.5, cfg.dtype),
+        "mu_r": jnp.full((nl, d), 0.5, cfg.dtype),
+        "wk": L.dense_init(ks[8], (nl, d, f), in_axis=1, dtype=cfg.dtype),
+        "wv": L.dense_init(ks[9], (nl, f, d), in_axis=1, dtype=cfg.dtype),
+        "wr": L.dense_init(ks[10], (nl, d, d), in_axis=1, dtype=cfg.dtype),
+    }
+    return {
+        "embed": L.dense_init(ks[11], (cfg.vocab, d), in_axis=1, dtype=cfg.dtype),
+        "ln_in": jnp.ones((d,), cfg.dtype),  # rwkv has an input layernorm
+        "layers": {
+            "ln1": jnp.ones((nl, d), cfg.dtype),
+            "tm": tm,
+            "ln2": jnp.ones((nl, d), cfg.dtype),
+            "cm": cm,
+        },
+        "final_norm": jnp.ones((d,), cfg.dtype),
+        "lm_head": L.dense_init(ks[12], (d, cfg.vocab), dtype=cfg.dtype),
+    }
+
+
+def param_axes(cfg: RWKV6Config) -> Dict:
+    vec = ("layers", "embed")
+    mat = ("layers", "embed", "embed_out")
+    tm = {
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_w": vec, "mu_g": vec,
+        "wr": mat, "wk": mat, "wv": mat, "wg": mat, "wo": mat,
+        "w0": vec, "wA": ("layers", "embed", None), "wB": ("layers", None, "embed"),
+        "u": vec, "ln_x": vec,
+    }
+    cm = {
+        "mu_k": vec, "mu_r": vec,
+        "wk": ("layers", "embed", "ffn"), "wv": ("layers", "ffn", "embed"),
+        "wr": mat,
+    }
+    return {
+        "embed": ("vocab", "embed"),
+        "ln_in": ("embed",),
+        "layers": {"ln1": vec, "tm": tm, "ln2": vec, "cm": cm},
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time-mix (WKV6)
+# ---------------------------------------------------------------------------
+
+
+#: cap on exp(w0 + lora): per-step decay w >= exp(-e^1.609) = exp(-5); decays
+#: beyond that are < 6.7e-3/step (influence < e-80 over one 16-chunk) and are
+#: numerically indistinguishable from zero, but keep exp(-cum) representable.
+DECAY_EXP_CAP = 1.609  # ln(5)
+
+
+def _shift(x):
+    """token shift: x_{t-1} (zeros at t=0). x (B, S, d)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _wkv6_chunked(cfg, r, k, v, logw, u):
+    """Chunked WKV6.
+
+    r,k,v (B,S,H,D), logw (B,S,H,D) (= log decay, <= 0), u (H,D).
+    Returns y (B,S,H,D), final state (B,H,D,D).
+    """
+    b, s, h, dd = r.shape
+    q = cfg.chunk
+    while s % q:
+        q //= 2
+    c = s // q
+    rc, kc, vc, wc = (t.reshape(b, c, q, h, dd) for t in (r, k, v, logw))
+
+    def chunk_step(S, inp):
+        rq, kq, vq, wq = (t.astype(jnp.float32) for t in inp)  # (B,Q,H,D)
+        cum = jnp.cumsum(wq, axis=1)  # inclusive cumsum of log w
+        # intra: A[t,s] = sum_d r_t exp(cum_{t-1} - cum_s) k_s   (s < t)
+        #        A[t,t] = sum_d r_t u k_t
+        cum_excl = cum - wq  # cumsum up to t-1
+        rt = rq * jnp.exp(cum_excl)  # decay-weighted queries
+        ks_ = kq * jnp.exp(-cum)  # decay-unweighted keys
+        a = jnp.einsum("bthd,bshd->bhts", rt, ks_)
+        tri = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        a = jnp.where(tri[None, None], a, 0.0)
+        diag = jnp.einsum("bthd,hd,bthd->bth", rq, u, kq)
+        y = jnp.einsum("bhts,bshd->bthd", a, vq)
+        y = y + diag[..., None] * vq  # bonus u: the current token's own kv
+        # inter: y += (r_t * exp(cum_{t-1})) . S
+        y = y + jnp.einsum("bthd,bhde->bthe", rt, S)
+        # state update: S' = Diag(exp(cum_Q)) S + sum_s exp(cum_Q - cum_s) k_s v_s^T
+        total = cum[:, -1]  # (B,H,D)
+        S = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bshd,bshe->bhde", kq * jnp.exp(total[:, None] - cum), vq
+        )
+        return S, y
+
+    s0 = jnp.zeros((b, h, dd, dd), jnp.float32)
+    inputs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rc, kc, vc, wc))
+    sf, yc = jax.lax.scan(chunk_step, s0, inputs)
+    return yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dd), sf
+
+
+def _head_norm(cfg, y, scale):
+    """per-head rmsnorm over the head dim (stand-in for GroupNorm)."""
+    b, s, h, dd = y.shape
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).reshape(b, s, h * dd)
+    return y.astype(scale.dtype) * scale
+
+
+def time_mix(cfg, p, x, sharder: Sharder = _id_sharder):
+    b, s, d = x.shape
+    h, dd = cfg.n_heads, cfg.head_size
+    xp = _shift(x)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu_g"]), p["wg"])
+    xw = _mix(x, xp, p["mu_w"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wA"])),
+                      p["wB"])
+    logw = -jnp.exp(jnp.minimum(p["w0"] + lora.astype(jnp.float32), DECAY_EXP_CAP))
+    rs = r.reshape(b, s, h, dd)
+    rs = sharder(rs, ("batch", None, "heads", None))
+    y, _ = _wkv6_chunked(
+        cfg,
+        rs,
+        k.reshape(b, s, h, dd),
+        v.reshape(b, s, h, dd),
+        logw.reshape(b, s, h, dd),
+        p["u"].reshape(h, dd),
+    )
+    y = _head_norm(cfg, y, p["ln_x"]) * jax.nn.silu(g)
+    return jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["wo"])
+
+
+def channel_mix(cfg, p, x):
+    xp = _shift(x)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xp, p["mu_k"]), p["wk"])
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)), p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu_r"]), p["wr"])) * kv
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, x, sharder: Sharder = _id_sharder):
+    def body(hh, lp):
+        hh = hh + time_mix(cfg, lp["tm"], L.rmsnorm(hh, lp["ln1"]), sharder)
+        hh = hh + channel_mix(cfg, lp["cm"], L.rmsnorm(hh, lp["ln2"]))
+        return sharder(hh, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, x, params["layers"])
+    return L.rmsnorm(h, params["final_norm"])
+
+
+def loss_fn(cfg: RWKV6Config, params, batch, sharder: Sharder = _id_sharder):
+    tokens = batch["tokens"]
+    x = L.rmsnorm(params["embed"][tokens], params["ln_in"])
+    x = sharder(x, ("batch", "seq", "embed"))
+    h = forward(cfg, params, x, sharder)
+    logits = jnp.einsum("bsd,dv->bsv", h[:, :-1], params["lm_head"])
+    return L.softmax_xent(logits, tokens[:, 1:], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: state-based (no KV cache at all)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: RWKV6Config, batch: int, max_len: int = 0) -> Dict:
+    h, dd = cfg.n_heads, cfg.head_size
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, dd, dd), jnp.float32),
+        "x_tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+        "x_cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: RWKV6Config) -> Dict:
+    return {
+        "wkv": ("layers", "batch", "heads", None, None),
+        "x_tm": ("layers", "batch", "embed"),
+        "x_cm": ("layers", "batch", "embed"),
+        "length": ("batch",),
+    }
+
+
+def _tm_step(cfg, p, x, x_prev, S):
+    """single-token time-mix. x (B,d), S (B,H,D,D)."""
+    b, d = x.shape
+    h, dd = cfg.n_heads, cfg.head_size
+    r = jnp.einsum("bd,de->be", _mix(x, x_prev, p["mu_r"]), p["wr"]).reshape(b, h, dd)
+    k = jnp.einsum("bd,de->be", _mix(x, x_prev, p["mu_k"]), p["wk"]).reshape(b, h, dd)
+    v = jnp.einsum("bd,de->be", _mix(x, x_prev, p["mu_v"]), p["wv"]).reshape(b, h, dd)
+    g = jnp.einsum("bd,de->be", _mix(x, x_prev, p["mu_g"]), p["wg"])
+    xw = _mix(x, x_prev, p["mu_w"])
+    lora = jnp.einsum("br,rd->bd", jnp.tanh(jnp.einsum("bd,dr->br", xw, p["wA"])), p["wB"])
+    w = jnp.exp(-jnp.exp(jnp.minimum(p["w0"] + lora.astype(jnp.float32),
+                                 DECAY_EXP_CAP))).reshape(b, h, dd)
+    u = p["u"].reshape(h, dd)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    y = jnp.einsum("bhd,bhde->bhe", rf, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).reshape(b, h * dd).astype(x.dtype)
+    y = y * p["ln_x"] * jax.nn.silu(g)
+    return jnp.einsum("bd,de->be", y, p["wo"]), S
+
+
+def _cm_step(cfg, p, x, x_prev):
+    k = jnp.einsum("bd,df->bf", _mix(x, x_prev, p["mu_k"]), p["wk"])
+    kv = jnp.einsum("bf,fd->bd", jnp.square(jax.nn.relu(k)), p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bd,de->be", _mix(x, x_prev, p["mu_r"]), p["wr"])) * kv
+
+
+def decode_step(cfg, params, cache, tokens, sharder: Sharder = _id_sharder):
+    x = L.rmsnorm(params["embed"][tokens], params["ln_in"])  # (B, d)
+
+    def body(h, scanned):
+        lp, S, xtm, xcm = scanned
+        xin = L.rmsnorm(h, lp["ln1"])
+        y, S2 = _tm_step(cfg, lp["tm"], xin, xtm, S)
+        h = h + y
+        xin2 = L.rmsnorm(h, lp["ln2"])
+        h = h + _cm_step(cfg, lp["cm"], xin2, xcm)
+        return h, (S2, xin, xin2)
+
+    h, (new_wkv, new_xtm, new_xcm) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["x_tm"], cache["x_cm"])
+    )
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", h, params["lm_head"])
+    return logits, {
+        "wkv": new_wkv, "x_tm": new_xtm, "x_cm": new_xcm,
+        "length": cache["length"] + 1,
+    }
+
+
+def prefill(cfg, params, batch, cache, sharder: Sharder = _id_sharder):
+    """Run the prompt with the chunked form, emit final recurrent states."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.rmsnorm(params["embed"][tokens], params["ln_in"])
+
+    def body(h, lp):
+        xin = L.rmsnorm(h, lp["ln1"])
+        xp = _shift(xin)
+        p = lp["tm"]
+        hh, dd = cfg.n_heads, cfg.head_size
+        r = jnp.einsum("bsd,de->bse", _mix(xin, xp, p["mu_r"]), p["wr"])
+        k = jnp.einsum("bsd,de->bse", _mix(xin, xp, p["mu_k"]), p["wk"])
+        v = jnp.einsum("bsd,de->bse", _mix(xin, xp, p["mu_v"]), p["wv"])
+        g = jnp.einsum("bsd,de->bse", _mix(xin, xp, p["mu_g"]), p["wg"])
+        xw = _mix(xin, xp, p["mu_w"])
+        lora = jnp.einsum("bsr,rd->bsd",
+                          jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wA"])), p["wB"])
+        logw = -jnp.exp(jnp.minimum(p["w0"] + lora.astype(jnp.float32),
+                                    DECAY_EXP_CAP))
+        y, S = _wkv6_chunked(
+            cfg, r.reshape(b, s, hh, dd), k.reshape(b, s, hh, dd),
+            v.reshape(b, s, hh, dd), logw.reshape(b, s, hh, dd),
+            p["u"].reshape(hh, dd),
+        )
+        y = _head_norm(cfg, y, p["ln_x"]) * jax.nn.silu(g)
+        h = h + jnp.einsum("bsd,de->bse", y.astype(h.dtype), p["wo"])
+        xin2 = L.rmsnorm(h, lp["ln2"])
+        h = h + channel_mix(cfg, lp["cm"], xin2)
+        return h, (S, xin[:, -1], xin2[:, -1])
+
+    h, (wkv, xtm, xcm) = jax.lax.scan(body, x, params["layers"])
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h[:, -1:], params["lm_head"])
+    return logits, {
+        "wkv": wkv, "x_tm": xtm, "x_cm": xcm,
+        "length": jnp.full((b,), s, jnp.int32),
+    }

@@ -1,0 +1,305 @@
+"""Dense decoder-only transformer LM (GQA + RoPE, optional SWA / prefix-LM).
+
+Covers starcoder2-15b, h2o-danube-3-4b (SWA), internlm2-20b, smollm-135m and
+is the backbone for paligemma (prefix-LM + patch prefix) and the whisper
+decoder. Layers are scanned with stacked params.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+Sharder = Callable[[jax.Array, Tuple[Optional[str], ...]], jax.Array]
+
+
+def _id_sharder(x, axes):
+    return x
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "gelu"
+    gated: bool = False
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None  # sliding-window attention
+    tie_embeddings: bool = True
+    embed_scale: bool = False  # gemma-style sqrt(d) embedding multiplier
+    prefix_lm: bool = False  # bidirectional prefix (paligemma)
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        d, h, kv, dh, f, v = (
+            self.d_model, self.n_heads, self.n_kv, self.dh, self.d_ff, self.vocab,
+        )
+        per_layer = d * (h * dh) + 2 * d * (kv * dh) + (h * dh) * d
+        per_layer += d * f * (3 if self.gated else 2) + 2 * d
+        total = self.n_layers * per_layer + v * d + d
+        if not self.tie_embeddings:
+            total += d * v
+        return total
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(cfg, shape):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones(shape, cfg.dtype), "bias": jnp.zeros(shape, cfg.dtype)}
+    return {"scale": jnp.ones(shape, cfg.dtype)}
+
+
+def _norm_axes(cfg, names):
+    if cfg.norm == "layernorm":
+        return {"scale": names, "bias": names}
+    return {"scale": names}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return L.layernorm(x, p["scale"], p["bias"])
+    return L.rmsnorm(x, p["scale"])
+
+
+def layer_init(cfg: TransformerConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.dh
+    return {
+        "ln1": _norm_init(cfg, (cfg.n_layers, d)),
+        "attn": {
+            "wq": L.dense_init(ks[0], (cfg.n_layers, d, h * dh), in_axis=1, dtype=cfg.dtype),
+            "wk": L.dense_init(ks[1], (cfg.n_layers, d, kv * dh), in_axis=1, dtype=cfg.dtype),
+            "wv": L.dense_init(ks[2], (cfg.n_layers, d, kv * dh), in_axis=1, dtype=cfg.dtype),
+            "wo": L.dense_init(ks[3], (cfg.n_layers, h * dh, d), in_axis=1, dtype=cfg.dtype),
+        },
+        "ln2": _norm_init(cfg, (cfg.n_layers, d)),
+        "mlp": _stacked_mlp_init(cfg, ks[4]),
+    }
+
+
+def _stacked_mlp_init(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": L.dense_init(ks[0], (cfg.n_layers, d, f), in_axis=1, dtype=cfg.dtype),
+        "wo": L.dense_init(ks[1], (cfg.n_layers, f, d), in_axis=1, dtype=cfg.dtype),
+    }
+    if cfg.gated:
+        p["wg"] = L.dense_init(ks[2], (cfg.n_layers, d, f), in_axis=1, dtype=cfg.dtype)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> Dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": L.dense_init(k_embed, (cfg.vocab, cfg.d_model), in_axis=1, dtype=cfg.dtype),
+        "layers": layer_init(cfg, k_layers),
+        "final_norm": _norm_init(cfg, (cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), in_axis=0, dtype=cfg.dtype
+        )
+    return params
+
+
+def param_axes(cfg: TransformerConfig) -> Dict:
+    """Logical dimension names per leaf (consumed by the sharding rules)."""
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": {
+            "ln1": _norm_axes(cfg, ("layers", "embed")),
+            "attn": {
+                "wq": ("layers", "embed", "heads"),
+                "wk": ("layers", "embed", "kv_heads"),
+                "wv": ("layers", "embed", "kv_heads"),
+                "wo": ("layers", "heads", "embed"),
+            },
+            "ln2": _norm_axes(cfg, ("layers", "embed")),
+            "mlp": {k: ("layers",) + v for k, v in L.mlp_axes(cfg.gated).items()},
+        },
+        "final_norm": _norm_axes(cfg, ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(cfg, p, x, positions, prefix_len, sharder: Sharder):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, kv, dh)
+    q = sharder(q, ("batch", None, "heads", None))
+    k = sharder(k, ("batch", None, "kv_heads", None))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.flash_attention(
+        q, k, v, causal=True, window=cfg.window, prefix_len=prefix_len
+    )
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * dh), p["wo"])
+    return out, (k, v)
+
+
+def _block(cfg, lp, x, positions, prefix_len, sharder: Sharder):
+    a, kv = _attn_block(cfg, lp["attn"], _apply_norm(cfg, lp["ln1"], x), positions,
+                        prefix_len, sharder)
+    x = x + a
+    x = sharder(x, ("batch", "seq", "embed"))
+    m = L.mlp_apply(lp["mlp"], _apply_norm(cfg, lp["ln2"], x), cfg.act, cfg.gated)
+    m = sharder(m, ("batch", "seq", "embed"))
+    return x + m, kv
+
+
+def forward(
+    cfg: TransformerConfig,
+    params: Dict,
+    x: jax.Array,  # (B, S, d) embedded input
+    positions: jax.Array,  # (B, S)
+    prefix_len=None,
+    sharder: Sharder = _id_sharder,
+    collect_kv: bool = False,
+):
+    def body(h, lp):
+        out, kv = _block(cfg, lp, h, positions, prefix_len, sharder)
+        return out, kv if collect_kv else None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, kvs = jax.lax.scan(body_fn, x, params["layers"])
+    h = _apply_norm(cfg, params["final_norm"], h)
+    return h, kvs
+
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    return x
+
+
+def logits_from_hidden(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def loss_fn(cfg: TransformerConfig, params, batch, sharder: Sharder = _id_sharder):
+    tokens = batch["tokens"]  # (B, S)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(cfg, params, tokens)
+    x = sharder(x, ("batch", "seq", "embed"))
+    h, _ = forward(cfg, params, x, positions,
+                   prefix_len=batch.get("prefix_len"), sharder=sharder)
+    logits = logits_from_hidden(cfg, params, h[:, :-1])
+    return L.softmax_xent(logits, tokens[:, 1:], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + dense-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: TransformerConfig) -> Dict:
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "length": ("batch",),
+    }
+
+
+def prefill(cfg, params, batch, cache, sharder: Sharder = _id_sharder):
+    """Run the prompt through the model, fill the cache, return last logits."""
+    tokens = batch["tokens"]  # (B, S_prompt)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(cfg, params, tokens)
+    h, kvs = forward(cfg, params, x, positions, prefix_len=batch.get("prefix_len"),
+                     sharder=sharder, collect_kv=True)
+    k, v = kvs  # (L, B, S, KVH, Dh)
+    max_len = cache["k"].shape[2]
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cfg.dtype), (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cfg.dtype), (0, 0, 0, 0, 0)),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    logits = logits_from_hidden(cfg, params, h[:, -1:])
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, sharder: Sharder = _id_sharder):
+    """One token per sequence through the dense KV cache. tokens: (B,)"""
+    b = tokens.shape[0]
+    lengths = cache["length"]  # (B,)
+    x = embed_tokens(cfg, params, tokens[:, None])  # (B, 1, d)
+    positions = lengths[:, None]
+
+    def body(h, scanned):
+        lp, kc, vc = scanned
+        xin = _apply_norm(cfg, lp["ln1"], h)
+        hh, kv_, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+        q = jnp.einsum("bsd,dh->bsh", xin, lp["attn"]["wq"]).reshape(b, 1, hh, dh)
+        k = jnp.einsum("bsd,dh->bsh", xin, lp["attn"]["wk"]).reshape(b, 1, kv_, dh)
+        v = jnp.einsum("bsd,dh->bsh", xin, lp["attn"]["wv"]).reshape(b, 1, kv_, dh)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        # write the new token into the cache at each sequence's length
+        kc = _write_token(kc, k.astype(kc.dtype), lengths)
+        vc = _write_token(vc, v.astype(vc.dtype), lengths)
+        o = L.decode_attention_dense(q, kc, vc, lengths + 1, window=cfg.window)
+        a = jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, hh * dh), lp["attn"]["wo"])
+        h = h + a
+        m = L.mlp_apply(lp["mlp"], _apply_norm(cfg, lp["ln2"], h), cfg.act, cfg.gated)
+        return h + m, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    h = _apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, h)
+    new_cache = {"k": new_k, "v": new_v, "length": lengths + 1}
+    return logits[:, 0], new_cache
+
+
+def _write_token(cache, token_kv, lengths):
+    """cache (B, S, KVH, D), token_kv (B, 1, KVH, D), write at lengths[b]."""
+
+    def per_seq(c, t, ln):
+        return jax.lax.dynamic_update_slice(c, t, (ln, 0, 0))
+
+    return jax.vmap(per_seq)(cache, token_kv, lengths)

@@ -1,0 +1,295 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB).
+
+Per the assignment, ``input_specs()`` provides precomputed frame embeddings
+(the conv1d+GELU downsampling front end is stubbed): encoder input is
+(B, S_frames, d_model). Encoder = bidirectional self-attention stack;
+decoder = causal self-attention + cross-attention to the encoder memory.
+Decode keeps a growing self-KV cache and a static cross-KV cache.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import Sharder, _id_sharder, _write_token
+
+
+@dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    n_layers: int = 24  # per stack (24 enc + 24 dec)
+    d_model: int = 1024
+    n_heads: int = 16
+    n_kv: int = 16
+    d_ff: int = 4096
+    vocab: int = 51865
+    max_positions: int = 65536  # learned decoder positions (synthetic scale)
+    act: str = "gelu"
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        d, h, kv, dh, f = self.d_model, self.n_heads, self.n_kv, self.dh, self.d_ff
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        enc_layer = attn + 2 * d * f + 4 * d
+        dec_layer = 2 * attn + 2 * d * f + 6 * d
+        return (
+            self.n_layers * (enc_layer + dec_layer)
+            + self.vocab * d + self.max_positions * d + 4 * d
+        )
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.dh
+    nl = cfg.n_layers
+    return {
+        "wq": L.dense_init(ks[0], (nl, d, h * dh), in_axis=1, dtype=cfg.dtype),
+        "wk": L.dense_init(ks[1], (nl, d, kv * dh), in_axis=1, dtype=cfg.dtype),
+        "wv": L.dense_init(ks[2], (nl, d, kv * dh), in_axis=1, dtype=cfg.dtype),
+        "wo": L.dense_init(ks[3], (nl, h * dh, d), in_axis=1, dtype=cfg.dtype),
+    }
+
+
+def _ln_init(cfg, shape):
+    return {"scale": jnp.ones(shape, cfg.dtype), "bias": jnp.zeros(shape, cfg.dtype)}
+
+
+def _mlp_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    nl, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    return {
+        "wi": L.dense_init(ks[0], (nl, d, f), in_axis=1, dtype=cfg.dtype),
+        "wo": L.dense_init(ks[1], (nl, f, d), in_axis=1, dtype=cfg.dtype),
+    }
+
+
+def init_params(cfg: WhisperConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    nl, d = cfg.n_layers, cfg.d_model
+    return {
+        "encoder": {
+            "ln1": _ln_init(cfg, (nl, d)),
+            "attn": _attn_init(ks[0], cfg),
+            "ln2": _ln_init(cfg, (nl, d)),
+            "mlp": _mlp_init(ks[1], cfg),
+            "ln_post": _ln_init(cfg, (d,)),
+        },
+        "decoder": {
+            "embed": L.dense_init(ks[2], (cfg.vocab, d), in_axis=1, dtype=cfg.dtype),
+            "pos": (jax.random.normal(ks[3], (cfg.max_positions, d)) * 0.01).astype(cfg.dtype),
+            "ln1": _ln_init(cfg, (nl, d)),
+            "self_attn": _attn_init(ks[4], cfg),
+            "ln_x": _ln_init(cfg, (nl, d)),
+            "cross_attn": _attn_init(ks[5], cfg),
+            "ln2": _ln_init(cfg, (nl, d)),
+            "mlp": _mlp_init(ks[6], cfg),
+            "ln_post": _ln_init(cfg, (d,)),
+        },
+    }
+
+
+def param_axes(cfg: WhisperConfig) -> Dict:
+    ln = {"scale": ("layers", "embed"), "bias": ("layers", "embed")}
+    ln1 = {"scale": ("embed",), "bias": ("embed",)}
+    attn = {
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "kv_heads"),
+        "wv": ("layers", "embed", "kv_heads"),
+        "wo": ("layers", "heads", "embed"),
+    }
+    mlp = {"wi": ("layers", "embed", "ffn"), "wo": ("layers", "ffn", "embed")}
+    return {
+        "encoder": {"ln1": ln, "attn": attn, "ln2": ln, "mlp": mlp, "ln_post": ln1},
+        "decoder": {
+            "embed": ("vocab", "embed"),
+            "pos": ("position", "embed"),
+            "ln1": ln, "self_attn": attn, "ln_x": ln, "cross_attn": attn,
+            "ln2": ln, "mlp": mlp, "ln_post": ln1,
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention helpers
+# ---------------------------------------------------------------------------
+
+
+def _ln(p, x):
+    return L.layernorm(x, p["scale"], p["bias"])
+
+
+def _proj_qkv(cfg, p, xq, xkv):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    q = jnp.einsum("bsd,dh->bsh", xq, p["wq"]).reshape(b, sq, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", xkv, p["wk"]).reshape(b, skv, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", xkv, p["wv"]).reshape(b, skv, kv, dh)
+    return q, k, v
+
+
+def _attn(cfg, p, xq, xkv, causal: bool):
+    q, k, v = _proj_qkv(cfg, p, xq, xkv)
+    o = L.flash_attention(q, k, v, causal=causal)
+    b, s, _, _ = o.shape
+    return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1), p["wo"]), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder stacks
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(s, d, dtype):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encode(cfg, params, frames, sharder: Sharder = _id_sharder):
+    """frames (B, S, d) (conv-frontend stub output) -> memory (B, S, d)."""
+    p = params["encoder"]
+    x = frames.astype(cfg.dtype) + _sinusoid(frames.shape[1], cfg.d_model, cfg.dtype)
+
+    def body(h, lp):
+        a, _ = _attn(cfg, lp["attn"], _ln(lp["ln1"], h), _ln(lp["ln1"], h), causal=False)
+        h = h + a
+        m = jnp.einsum("bsf,fd->bsd",
+                       jax.nn.gelu(jnp.einsum("bsd,df->bsf", _ln(lp["ln2"], h),
+                                              lp["mlp"]["wi"])), lp["mlp"]["wo"])
+        return sharder(h + m, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, {k: p[k] for k in ("ln1", "attn", "ln2", "mlp")})
+    return _ln(p["ln_post"], x)
+
+
+def decode_train(cfg, params, tokens, memory, sharder: Sharder = _id_sharder,
+                 collect_kv: bool = False):
+    p = params["decoder"]
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos"][:s]
+
+    def body(h, lp):
+        a, kv = _attn(cfg, lp["self_attn"], _ln(lp["ln1"], h), _ln(lp["ln1"], h),
+                      causal=True)
+        h = h + a
+        c, ckv = _attn(cfg, lp["cross_attn"], _ln(lp["ln_x"], h), memory, causal=False)
+        h = h + c
+        m = jnp.einsum("bsf,fd->bsd",
+                       jax.nn.gelu(jnp.einsum("bsd,df->bsf", _ln(lp["ln2"], h),
+                                              lp["mlp"]["wi"])), lp["mlp"]["wo"])
+        h = sharder(h + m, ("batch", "seq", "embed"))
+        return h, (kv, ckv) if collect_kv else None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    scanned = {k: p[k] for k in ("ln1", "self_attn", "ln_x", "cross_attn", "ln2", "mlp")}
+    x, kvs = jax.lax.scan(body_fn, x, scanned)
+    x = _ln(p["ln_post"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["embed"].T)
+    return logits, kvs
+
+
+def loss_fn(cfg: WhisperConfig, params, batch, sharder: Sharder = _id_sharder):
+    memory = encode(cfg, params, batch["frames"], sharder)
+    logits, _ = decode_train(cfg, params, batch["tokens"][:, :-1], memory, sharder)
+    return L.softmax_xent(logits, batch["tokens"][:, 1:], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: WhisperConfig, batch: int, max_len: int, enc_len: int) -> Dict:
+    nl, kv, dh = cfg.n_layers, cfg.n_kv, cfg.dh
+    return {
+        "k": jnp.zeros((nl, batch, max_len, kv, dh), cfg.dtype),
+        "v": jnp.zeros((nl, batch, max_len, kv, dh), cfg.dtype),
+        "xk": jnp.zeros((nl, batch, enc_len, kv, dh), cfg.dtype),
+        "xv": jnp.zeros((nl, batch, enc_len, kv, dh), cfg.dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: WhisperConfig) -> Dict:
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "xk": ("layers", "batch", "enc_seq", "kv_heads", None),
+        "xv": ("layers", "batch", "enc_seq", "kv_heads", None),
+        "length": ("batch",),
+    }
+
+
+def prefill(cfg, params, batch, cache, sharder: Sharder = _id_sharder):
+    """Encode frames + run the decoder prompt; fill self- and cross-KV."""
+    memory = encode(cfg, params, batch["frames"], sharder)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    logits, kvs = decode_train(cfg, params, tokens, memory, sharder, collect_kv=True)
+    (k, v), (xk, xv) = kvs
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cfg.dtype), (0,) * 5),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cfg.dtype), (0,) * 5),
+        "xk": xk.astype(cfg.dtype),
+        "xv": xv.astype(cfg.dtype),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return logits[:, -1:], cache
+
+
+def decode_step(cfg, params, cache, tokens, sharder: Sharder = _id_sharder):
+    p = params["decoder"]
+    b = tokens.shape[0]
+    lengths = cache["length"]
+    x = p["embed"][tokens][:, None] + p["pos"][lengths][:, None]
+    h_, kv_, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+
+    def body(h, scanned):
+        lp, kc, vc, xk, xv = scanned
+        xin = _ln(lp["ln1"], h)
+        q, k, v = _proj_qkv(cfg, lp["self_attn"], xin, xin)
+        kc = _write_token(kc, k.astype(kc.dtype), lengths)
+        vc = _write_token(vc, v.astype(vc.dtype), lengths)
+        o = L.decode_attention_dense(q, kc, vc, lengths + 1)
+        h = h + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, h_ * dh),
+                           lp["self_attn"]["wo"])
+        # cross attention over the static encoder memory
+        xq = jnp.einsum("bsd,dh->bsh", _ln(lp["ln_x"], h),
+                        lp["cross_attn"]["wq"]).reshape(b, 1, h_, dh)
+        enc_len = jnp.full((b,), xk.shape[1], jnp.int32)
+        xo = L.decode_attention_dense(xq, xk, xv, enc_len)
+        h = h + jnp.einsum("bsh,hd->bsd", xo.reshape(b, 1, h_ * dh),
+                           lp["cross_attn"]["wo"])
+        m = jnp.einsum("bsf,fd->bsd",
+                       jax.nn.gelu(jnp.einsum("bsd,df->bsf", _ln(lp["ln2"], h),
+                                              lp["mlp"]["wi"])), lp["mlp"]["wo"])
+        return h + m, (kc, vc)
+
+    scanned_p = {k: p[k] for k in ("ln1", "self_attn", "ln_x", "cross_attn", "ln2", "mlp")}
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (scanned_p, cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = _ln(p["ln_post"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, p["embed"].T)
+    return logits[:, 0], {
+        "k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"], "length": lengths + 1,
+    }

@@ -1,0 +1,340 @@
+"""Zamba2: Mamba2 backbone with a SHARED attention+MLP block interleaved.
+
+Structure (arXiv:2411.15242, simplified — see DESIGN.md): ``n_layers``
+mamba2 mixers; after every ``attn_every``-th mixer the single shared
+transformer block (one set of weights, applied ``n_apps`` times) runs over
+the hidden state. Each application keeps its own KV cache.
+
+Layers are grouped so the scan emits KV only at the 6 shared-block
+applications (not per mamba layer) — prefill memory stays O(n_apps), not
+O(n_layers).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M2
+from .transformer import Sharder, _id_sharder
+
+
+@dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    n_layers: int = 38
+    d_model: int = 2048
+    n_heads: int = 32
+    n_kv: int = 32
+    d_ff: int = 8192
+    vocab: int = 32000
+    d_state: int = 64
+    attn_every: int = 6
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    act: str = "silu"
+    gated: bool = True
+    chunk: int = 64
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def mamba(self) -> M2.Mamba2Config:
+        return M2.Mamba2Config(d_model=self.d_model, d_state=self.d_state,
+                               chunk=self.chunk)
+
+    @property
+    def n_apps(self) -> int:
+        return self.n_layers // self.attn_every
+
+    @property
+    def groups(self) -> List[Tuple[int, int, bool]]:
+        """(start_layer, n_mamba_layers, has_attn) blocks."""
+        out = []
+        l = 0
+        for _ in range(self.n_apps):
+            out.append((l, self.attn_every, True))
+            l += self.attn_every
+        if l < self.n_layers:
+            out.append((l, self.n_layers - l, False))
+        return out
+
+    @property
+    def n_params(self) -> int:
+        m = self.mamba
+        per_mamba = (
+            self.d_model * (2 * m.d_inner + 2 * m.d_state + m.n_heads)
+            + m.d_conv * m.conv_channels + m.conv_channels
+            + 3 * m.n_heads + m.d_inner + m.d_inner * self.d_model
+        )
+        shared = (
+            self.d_model * (self.n_heads + 2 * self.n_kv) * self.dh
+            + self.n_heads * self.dh * self.d_model
+            + self.d_model * self.d_ff * (3 if self.gated else 2)
+            + 4 * self.d_model
+        )
+        return (self.n_layers * per_mamba + shared
+                + self.vocab * self.d_model + 2 * self.d_model)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: Zamba2Config, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.dh
+    shared = {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "attn": {
+            "wq": L.dense_init(ks[0], (d, h * dh), dtype=cfg.dtype),
+            "wk": L.dense_init(ks[1], (d, kv * dh), dtype=cfg.dtype),
+            "wv": L.dense_init(ks[2], (d, kv * dh), dtype=cfg.dtype),
+            "wo": L.dense_init(ks[3], (h * dh, d), dtype=cfg.dtype),
+        },
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "mlp": L.mlp_init(ks[4], d, cfg.d_ff, cfg.gated, cfg.dtype),
+    }
+    return {
+        "embed": L.dense_init(ks[5], (cfg.vocab, d), in_axis=1, dtype=cfg.dtype),
+        "mamba": M2.block_init(cfg.mamba, ks[6], cfg.n_layers, cfg.dtype),
+        "mamba_ln": jnp.ones((cfg.n_layers, d), cfg.dtype),
+        "shared": shared,
+        "final_norm": jnp.ones((d,), cfg.dtype),
+    }
+
+
+def param_axes(cfg: Zamba2Config) -> Dict:
+    return {
+        "embed": ("vocab", "embed"),
+        "mamba": M2.block_axes(cfg.mamba),
+        "mamba_ln": ("layers", "embed"),
+        "shared": {
+            "ln1": ("embed",),
+            "attn": {
+                "wq": ("embed", "heads"),
+                "wk": ("embed", "kv_heads"),
+                "wv": ("embed", "kv_heads"),
+                "wo": ("heads", "embed"),
+            },
+            "ln2": ("embed",),
+            "mlp": L.mlp_axes(cfg.gated),
+        },
+        "final_norm": ("embed",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _shared_attn(cfg, sp, x, positions, sharder):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    xin = L.rmsnorm(x, sp["ln1"])
+    q = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wv"]).reshape(b, s, kv, dh)
+    q = sharder(q, ("batch", None, "heads", None))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.flash_attention(q, k, v, causal=True)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * dh), sp["attn"]["wo"])
+    m = L.mlp_apply(sp["mlp"], L.rmsnorm(x, sp["ln2"]), cfg.act, cfg.gated)
+    return x + sharder(m, ("batch", "seq", "embed")), (k, v)
+
+
+def _mamba_group(cfg, params, x, lo: int, n: int, sharder):
+    """Scan ``n`` mamba layers starting at ``lo`` (static slice of params)."""
+    sl = jax.tree.map(lambda t: t[lo : lo + n], params["mamba"])
+    lns = params["mamba_ln"][lo : lo + n]
+
+    def body(h, inp):
+        lp, ln = inp
+        out = h + M2.apply_block(cfg.mamba, lp, L.rmsnorm(h, ln))
+        return sharder(out, ("batch", "seq", "embed")), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (sl, lns))
+    return x
+
+
+def forward(cfg, params, x, positions, sharder: Sharder = _id_sharder,
+            collect_kv: bool = False):
+    kvs = []
+    for lo, n, has_attn in cfg.groups:
+        x = _mamba_group(cfg, params, x, lo, n, sharder)
+        if has_attn:
+            x, kv = _shared_attn(cfg, params["shared"], x, positions, sharder)
+            if collect_kv:
+                kvs.append(kv)
+    x = L.rmsnorm(x, params["final_norm"])
+    if collect_kv:
+        k = jnp.stack([kv[0] for kv in kvs])  # (A, B, S, KVH, Dh)
+        v = jnp.stack([kv[1] for kv in kvs])
+        return x, (k, v)
+    return x, None
+
+
+def loss_fn(cfg: Zamba2Config, params, batch, sharder: Sharder = _id_sharder):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = params["embed"][tokens]
+    x = sharder(x, ("batch", "seq", "embed"))
+    h, _ = forward(cfg, params, x, positions, sharder)
+    logits = jnp.einsum("bsd,dv->bsv", h[:, :-1], params["embed"].T)
+    return L.softmax_xent(logits, tokens[:, 1:], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: Zamba2Config, batch: int, max_len: int) -> Dict:
+    return {
+        "k": jnp.zeros((cfg.n_apps, batch, max_len, cfg.n_kv, cfg.dh), cfg.dtype),
+        "v": jnp.zeros((cfg.n_apps, batch, max_len, cfg.n_kv, cfg.dh), cfg.dtype),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.mamba.n_heads, cfg.mamba.head_p, cfg.d_state),
+            jnp.float32,
+        ),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.mamba.d_conv - 1, cfg.mamba.conv_channels),
+            cfg.dtype,
+        ),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: Zamba2Config) -> Dict:
+    return {
+        "k": (None, "batch", "kv_seq", "kv_heads", None),
+        "v": (None, "batch", "kv_seq", "kv_heads", None),
+        "ssm": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, "inner_conv"),
+        "length": ("batch",),
+    }
+
+
+def prefill(cfg, params, batch, cache, sharder: Sharder = _id_sharder):
+    """Prompt pass; fills attention KV caches and (final) SSM states.
+
+    SSM states for decode are rebuilt by replaying chunk scans; to keep the
+    code compact we recompute them with the recurrent path over the last
+    positions... instead we run the full chunked forward and additionally
+    thread recurrent states per layer (exactly once, still O(S))."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = params["embed"][tokens]
+    kvs = []
+    ssm_states, conv_states = [], []
+    for lo, n, has_attn in cfg.groups:
+        for li in range(lo, lo + n):
+            lp = jax.tree.map(lambda t, li=li: t[li], params["mamba"])
+            xin = L.rmsnorm(x, params["mamba_ln"][li])
+            y, hstate, cstate = _apply_block_with_state(cfg.mamba, lp, xin)
+            ssm_states.append(hstate)
+            conv_states.append(cstate)
+            x = x + y
+        if has_attn:
+            x, kv = _shared_attn(cfg, params["shared"], x, positions, sharder)
+            kvs.append(kv)
+    h = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h[:, -1:], params["embed"].T)
+    max_len = cache["k"].shape[2]
+    k = jnp.stack([kv[0] for kv in kvs])
+    v = jnp.stack([kv[1] for kv in kvs])
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cfg.dtype),
+                                          (0, 0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cfg.dtype),
+                                          (0, 0, 0, 0, 0)),
+        "ssm": jnp.stack(ssm_states),
+        "conv": jnp.stack(conv_states).astype(cfg.dtype),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def _apply_block_with_state(mcfg, lp, x):
+    """apply_block + expose final ssm/conv state (prefill needs both)."""
+    b, s, _ = x.shape
+    h, pp, n = mcfg.n_heads, mcfg.head_p, mcfg.d_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, lp["in_proj"])
+    z, xbc_raw, dt = M2._split_proj(mcfg, zxbcdt)
+    xbc = M2._causal_conv(mcfg, lp["conv_w"], lp["conv_b"], xbc_raw)
+    conv_state = xbc_raw[:, -(mcfg.d_conv - 1):]  # last raw inputs
+    xi = xbc[..., : mcfg.d_inner].reshape(b, s, h, pp)
+    bm = xbc[..., mcfg.d_inner : mcfg.d_inner + n]
+    cm = xbc[..., mcfg.d_inner + n :]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["A_log"])
+    y, hstate = M2._ssd_chunked(mcfg, xi.astype(jnp.float32), dtf, a,
+                                bm.astype(jnp.float32), cm.astype(jnp.float32))
+    y = y + lp["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, s, mcfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), lp["norm"])
+    return jnp.einsum("bsk,kd->bsd", y, lp["out_proj"]), hstate, conv_state
+
+
+def decode_step(cfg, params, cache, tokens, sharder: Sharder = _id_sharder):
+    b = tokens.shape[0]
+    lengths = cache["length"]
+    x = params["embed"][tokens]  # (B, d)
+    new_ssm = cache["ssm"]
+    new_conv = cache["conv"]
+    new_k, new_v = cache["k"], cache["v"]
+    app = 0
+    for lo, n, has_attn in cfg.groups:
+        for li in range(lo, lo + n):
+            lp = jax.tree.map(lambda t, li=li: t[li], params["mamba"])
+            y, st2 = M2.decode_block(cfg.mamba, lp,
+                                     {"ssm": new_ssm[li], "conv": new_conv[li]},
+                                     L.rmsnorm(x, params["mamba_ln"][li]))
+            x = x + y
+            new_ssm = new_ssm.at[li].set(st2["ssm"])
+            new_conv = new_conv.at[li].set(st2["conv"].astype(new_conv.dtype))
+        if has_attn:
+            x, new_k, new_v = _shared_attn_decode(
+                cfg, params["shared"], x, new_k, new_v, app, lengths
+            )
+            app += 1
+    h = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", h, params["embed"].T)
+    return logits, {
+        "k": new_k, "v": new_v, "ssm": new_ssm, "conv": new_conv,
+        "length": lengths + 1,
+    }
+
+
+def _shared_attn_decode(cfg, sp, x, kc_all, vc_all, app: int, lengths):
+    b, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    xin = L.rmsnorm(x, sp["ln1"])[:, None]  # (B,1,d)
+    q = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wq"]).reshape(b, 1, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wk"]).reshape(b, 1, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", xin, sp["attn"]["wv"]).reshape(b, 1, kv, dh)
+    pos = lengths[:, None]
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    from .transformer import _write_token
+
+    kc = _write_token(kc_all[app], k.astype(kc_all.dtype), lengths)
+    vc = _write_token(vc_all[app], v.astype(vc_all.dtype), lengths)
+    o = L.decode_attention_dense(q, kc, vc, lengths + 1)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, h * dh), sp["attn"]["wo"])[:, 0]
+    m = L.mlp_apply(sp["mlp"], L.rmsnorm(x, sp["ln2"]), cfg.act, cfg.gated)
+    return x + m, kc_all.at[app].set(kc), vc_all.at[app].set(vc)

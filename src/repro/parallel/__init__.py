@@ -1,0 +1,1 @@
+"""Parallelism: sharding rules, pipeline, collectives."""

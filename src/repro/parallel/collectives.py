@@ -1,0 +1,120 @@
+"""Distributed-optimization primitives: gradient compression and
+compute/communication overlap.
+
+``compressed_psum`` — error-feedback int8 gradient all-reduce: quantize to
+int8 with a per-tensor scale, all-reduce the int8 payload (8/32 of the
+f32 traffic crossing the slow DCN between pods), accumulate the
+quantization residual locally and add it back next step (error feedback
+keeps SGD unbiased in the long run; Karimireddy et al. 2019).
+
+``overlapped_all_gather`` — ring all-gather via ``ppermute`` structured as
+K pipelined hops so XLA's latency-hiding scheduler can overlap each hop's
+transfer with the caller's per-shard compute (double buffering); used for
+ZeRO-3 parameter gathers where the naive single all-gather serializes
+against the layer matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# error-feedback int8 compression
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grad: jax.Array, residual: jax.Array, axis_name: str):
+    """Error-feedback int8 psum over ``axis_name`` (inside shard_map/pmap).
+
+    A shared scale (global amax via a scalar pmax — negligible traffic) makes
+    the summed int8 payloads decode consistently; per-shard rounding error
+    goes into the residual and is re-injected next step (error feedback).
+    Returns (mean-reduced dequantized grad, new residual)."""
+    corrected = grad.astype(jnp.float32) + residual
+    amax = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_residual = corrected - q.astype(jnp.float32) * scale
+    # int8 payloads sum without overflow in int32
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = total.astype(jnp.float32) * scale / n
+    return mean, new_residual
+
+
+def make_compressed_grad_sync(mesh: Mesh, axis: str = "data"):
+    """shard_map wrapper: tree-level error-feedback int8 grad all-reduce."""
+
+    def sync(grads, residuals):
+        def one(g, r):
+            return compressed_psum(g, r, axis)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residuals)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return sync
+
+
+# ---------------------------------------------------------------------------
+# overlapped (pipelined) all-gather
+# ---------------------------------------------------------------------------
+
+
+def overlapped_all_gather(shard: jax.Array, axis_name: str, axis_size: int,
+                          compute_fn=None):
+    """Ring all-gather of ``shard`` over ``axis_name`` with per-hop compute.
+
+    Instead of one blocking all-gather, performs ``axis_size - 1`` ppermute
+    hops; after each hop the freshly-received shard is handed to
+    ``compute_fn(shard_index, shard)`` (if given) so transfer k+1 overlaps
+    compute k. Returns (stacked shards (axis_size, ...), list of compute
+    results). Inside shard_map only.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    parts = [shard]
+    results = []
+    if compute_fn is not None:
+        results.append(compute_fn(idx, shard))
+    cur = shard
+    for hop in range(1, axis_size):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        parts.append(cur)
+        if compute_fn is not None:
+            src = (idx - hop) % axis_size
+            results.append(compute_fn(src, cur))
+    return jnp.stack(parts), results
+
+
+def ring_layer_matmul(x: jax.Array, w_shard: jax.Array, axis_name: str,
+                      axis_size: int) -> jax.Array:
+    """y = x @ W with W row-sharded over the ring: each hop multiplies the
+    matching x-columns against the received W shard — the ZeRO-3 gather
+    fully overlapped with its consumer matmul."""
+    d_shard = w_shard.shape[0]
+
+    def compute(src_idx, w_part):
+        xs = jax.lax.dynamic_slice_in_dim(x, src_idx * d_shard, d_shard, axis=-1)
+        return jnp.einsum("...d,df->...f", xs, w_part)
+
+    _, partials = overlapped_all_gather(w_shard, axis_name, axis_size, compute)
+    return functools.reduce(jnp.add, partials)

@@ -1,0 +1,224 @@
+"""Logical-axis sharding rules (MaxText-style) -> NamedShardings.
+
+Every model leaf carries a tuple of logical dim names (``param_axes`` /
+``cache_axes``); rules map names to mesh axes. Divisibility is checked per
+leaf: a rule that does not divide the dimension falls back to replication
+(recorded, so the dry run can report e.g. "smollm heads=9 not sharded").
+
+Rule sets:
+  * train:   batch/data-parallel, TP over heads/ffn/vocab/experts, optional
+             Megatron sequence parallelism, optional ZeRO (params+opt over
+             'data' on the largest free dim).
+  * decode:  batch over data, KV sequence over 'model' (and 'data' too for
+             batch=1 long-context cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+
+#: tensor-parallel / data-parallel defaults shared by all rule sets
+BASE_RULES: Dict[str, AxisRule] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "expert": "model",
+    "embed_out": "model",  # square projections (rwkv): shard the output dim
+    "capacity": ("pod", "data"),  # MoE dispatch-buffer token slots
+    # mamba2 / rwkv internals
+    "inner": "model",
+    "inner_proj": "model",
+    "inner_conv": "model",
+    "ssm_heads": "model",
+    "position": None,
+    "embed": None,
+    "layers": None,
+    "vocab_in": None,
+    "enc_seq": None,
+    "kv_seq": None,
+    "seq": None,
+}
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    kind: str = "train",  # train | prefill | decode
+    seq_parallel: bool = False,
+    long_context: bool = False,
+    pure_dp: bool = False,
+) -> Dict[str, AxisRule]:
+    rules = dict(BASE_RULES)
+    if pure_dp:
+        # small models (heads not divisible by the model axis) run pure
+        # data-parallel: batch over EVERY mesh axis, no tensor parallelism —
+        # EXPERIMENTS.md §Perf smollm iteration 1
+        rules = {k: None for k in rules}
+        rules["batch"] = ("pod", "data", "model")
+        if kind == "decode":
+            rules["kv_seq"] = None
+        return _filter_rules(rules, mesh)
+    if seq_parallel and kind in ("train", "prefill"):
+        rules["seq"] = "model"
+    if kind == "decode":
+        rules["kv_seq"] = ("data", "model") if long_context else "model"
+    return _filter_rules(rules, mesh)
+
+
+def _filter_rules(rules: Dict[str, AxisRule], mesh: Mesh) -> Dict[str, AxisRule]:
+    """Drop axes this mesh does not have (single-pod has no 'pod')."""
+    names = set(mesh.axis_names)
+
+    def filt(rule: AxisRule) -> AxisRule:
+        if rule is None:
+            return None
+        if isinstance(rule, str):
+            return rule if rule in names else None
+        kept = tuple(a for a in rule if a in names)
+        return kept or None
+
+    return {k: filt(v) for k, v in rules.items()}
+
+
+def _axis_size(mesh: Mesh, rule: AxisRule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, str):
+        return mesh.shape[rule]
+    return int(np.prod([mesh.shape[a] for a in rule]))
+
+
+def spec_for_leaf(
+    shape: Sequence[int],
+    names: Sequence[Optional[str]],
+    rules: Dict[str, AxisRule],
+    mesh: Mesh,
+    fallbacks: Optional[List[str]] = None,
+) -> P:
+    """PartitionSpec for one leaf; skips non-divisible / duplicate axes."""
+    assert len(shape) == len(names), f"shape {shape} vs names {names}"
+    used: set = set()
+    parts: List[AxisRule] = []
+    for dim, name in zip(shape, names):
+        rule = rules.get(name) if name else None
+        if rule is not None:
+            axes = (rule,) if isinstance(rule, str) else tuple(rule)
+            if any(a in used for a in axes) or dim % _axis_size(mesh, rule) != 0:
+                if fallbacks is not None:
+                    fallbacks.append(f"{name}:{dim}")
+                rule = None
+        if rule is None:
+            parts.append(None)
+        else:
+            axes = (rule,) if isinstance(rule, str) else tuple(rule)
+            used.update(axes)
+            parts.append(rule if isinstance(rule, str) else tuple(rule))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def zero_extend(
+    spec: P,
+    shape: Sequence[int],
+    mesh: Mesh,
+    axes: Tuple[str, ...] = ("data",),
+    names: Optional[Sequence[Optional[str]]] = None,
+) -> P:
+    """ZeRO: additionally shard one unsharded dim over ``axes``.
+
+    Shards the largest divisible unsharded dim. NOTE (EXPERIMENTS.md §Perf):
+    sharding the stacked ``layers`` dim instead was tried and REFUTED — the
+    scan's dynamic-slice over a sharded axis triggers XLA's involuntary full
+    rematerialization. Consumers must force the gather with an explicit
+    sharding constraint on the sliced weight (see moe.moe_apply).
+    """
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return spec
+    used = set()
+    for p in spec:
+        if p is None:
+            continue
+        used.update((p,) if isinstance(p, str) else p)
+    if any(a in used for a in axes):
+        return spec
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (dim, p) in enumerate(zip(shape, parts)):
+        if p is not None or dim % size != 0:
+            continue
+        if dim > best_dim:
+            best, best_dim = i, dim
+    if best < 0:
+        return spec
+    parts[best] = axes[0] if len(axes) == 1 else tuple(axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(
+    shapes_tree: Any,  # pytree of ShapeDtypeStruct (or arrays)
+    axes_tree: Any,  # matching pytree of logical-name tuples
+    rules: Dict[str, AxisRule],
+    mesh: Mesh,
+    *,
+    zero: bool = False,
+    zero_axes: Tuple[str, ...] = ("pod", "data"),
+) -> Any:
+    """NamedSharding pytree for params / caches / optimizer state."""
+    fallbacks: List[str] = []
+
+    def one(shape_leaf, names):
+        shape = shape_leaf.shape
+        spec = spec_for_leaf(shape, names, rules, mesh, fallbacks)
+        if zero:
+            spec = zero_extend(spec, shape, mesh,
+                               tuple(a for a in zero_axes if a in mesh.axis_names),
+                               names=names)
+        return NamedSharding(mesh, spec)
+
+    out = jax.tree.map(one, shapes_tree, axes_tree,
+                       is_leaf=lambda x: isinstance(x, (tuple, list)) and all(
+                           isinstance(e, (str, type(None))) for e in x))
+    tree_shardings.last_fallbacks = fallbacks  # introspection for reports
+    return out
+
+
+def make_sharder(mesh: Mesh, rules: Dict[str, AxisRule], zero_params: bool = False):
+    """Activation-constraint injector passed into the model forward fns.
+
+    Carries ``mesh`` / ``rules`` / ``zero_params`` attributes so model code
+    that needs explicit collectives (the shard_map MoE dispatch) can build
+    its in/out specs without a separate plumbing path."""
+
+    def sharder(x, names):
+        spec = spec_for_leaf(x.shape, names, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    sharder.mesh = mesh
+    sharder.rules = rules
+    sharder.zero_params = zero_params
+    return sharder
+
+
+def batch_shardings(batch_specs: Dict, rules, mesh) -> Dict:
+    """Shardings for the input batch (tokens/frames/patches over batch)."""
+
+    def one(leaf):
+        names: List[Optional[str]] = ["batch"] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, spec_for_leaf(leaf.shape, names, rules, mesh))
+
+    return jax.tree.map(one, batch_specs)

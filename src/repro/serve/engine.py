@@ -1,0 +1,175 @@
+"""Continuous-batching serving engine over the stitched KV arena.
+
+The serving-side integration of GMLake (DESIGN.md §2.3): each request's KV
+history is a stitched allocation; admission/retirement churn is exactly the
+irregular alloc/free stream that fragments a splitting allocator, and the
+engine emits the real trace through ``TraceRecorder`` so the benchmark can
+replay it against caching vs GMLake.
+
+The engine is deliberately modest about model execution — it drives any
+registered family's prefill/decode on real (small) shapes; its value here
+is the memory-management path, which is the paper's subject.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kvcache import KVCacheConfig, StitchedKVCache
+from ..core.trace import TraceRecorder
+from ..models.api import family_of
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 1024
+    n_chunks: int = 512
+    interpret: bool = False
+    use_reference_ops: bool = True  # CPU-friendly default
+
+
+class ServeEngine:
+    """Dense-cache model execution + stitched-arena KV accounting.
+
+    Model steps run on the dense path (portable); every admission, growth
+    and retirement simultaneously drives the GMLake-backed
+    ``StitchedKVCache``, so arena utilization and the allocation trace
+    reflect real engine behaviour token-for-token.
+    """
+
+    def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg
+        self.fam = family_of(cfg)
+        self.recorder = TraceRecorder(kind="serve", model=cfg.name)
+        self.kv = StitchedKVCache(
+            KVCacheConfig(
+                n_layers=getattr(cfg, "n_layers", 1),
+                n_kv=getattr(cfg, "n_kv", 1),
+                head_dim=getattr(cfg, "dh", 64),
+                dtype=jnp.bfloat16,
+                n_chunks=engine_cfg.n_chunks,
+                use_reference_ops=engine_cfg.use_reference_ops,
+            ),
+            recorder=self.recorder,
+        )
+        self._next_id = itertools.count()
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}
+        self._cache = None  # dense model cache for the running batch
+        self._slot_of: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        rid = next(self._next_id)
+        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        while self.waiting and len(self.running) < self.ecfg.max_batch:
+            req = self.waiting.pop(0)
+            self.running[req.req_id] = req
+            self.kv.add_sequence(req.req_id, len(req.prompt))
+            slot = self._alloc_slot(req)
+            # dense prefill for this request alone (simple; batched prefill
+            # is an optimization the engine does not need for correctness)
+            cache = self.fam.init_cache(self.cfg, 1, self.ecfg.max_len)
+            logits, cache = self.fam.prefill(
+                self.cfg, self.params,
+                {"tokens": jnp.asarray(req.prompt[None, :])}, cache,
+            )
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(tok)
+            self._merge_cache(slot, cache)
+
+    def _alloc_slot(self, req: Request) -> int:
+        slot = len(self._slot_of)
+        for s in range(self.ecfg.max_batch):
+            if s not in self._slot_of.values():
+                slot = s
+                break
+        self._slot_of[req.req_id] = slot
+        return slot
+
+    def _merge_cache(self, slot: int, cache_1: Dict) -> None:
+        if self._cache is None:
+            self._cache = jax.tree.map(
+                lambda x: jnp.zeros((x.shape[0], self.ecfg.max_batch) + x.shape[2:],
+                                    x.dtype)
+                if x.ndim >= 2 else jnp.zeros((self.ecfg.max_batch,), x.dtype),
+                cache_1,
+            )
+        def put(full, one):
+            if one.ndim >= 2:  # (L, 1, ...) layer-stacked
+                return full.at[:, slot : slot + 1].set(one)
+            return full.at[slot : slot + 1].set(one)
+        self._cache = jax.tree.map(put, self._cache, cache_1)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step over the running batch. Returns #finished."""
+        self._admit()
+        if not self.running:
+            return 0
+        reqs = list(self.running.values())
+        slots = [self._slot_of[r.req_id] for r in reqs]
+        tokens = np.zeros((self.ecfg.max_batch,), np.int32)
+        for r, s in zip(reqs, slots):
+            tokens[s] = r.generated[-1]
+        logits, self._cache = self.fam.decode_step(
+            self.cfg, self.params, self._cache, jnp.asarray(tokens)
+        )
+        finished = 0
+        for r, s in zip(reqs, slots):
+            tok = int(jnp.argmax(logits[s]))
+            r.generated.append(tok)
+            self.kv.append_tokens(r.req_id, 1)
+            if len(r.generated) >= r.max_new:
+                r.done = True
+                finished += 1
+                self.kv.free_sequence(r.req_id)
+                del self.running[r.req_id]
+                del self._slot_of[r.req_id]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                break
+            before = set(self.running)
+            self.step()
+            for rid in before - set(self.running):
+                pass
+        return done
+
+    # ------------------------------------------------------------------
+    def memory_report(self) -> Dict[str, Any]:
+        alloc = self.kv.arena.allocator
+        return {
+            "reserved_bytes": alloc.reserved_bytes,
+            "active_bytes": alloc.stats.active_bytes,
+            "peak_reserved": alloc.stats.peak_reserved,
+            "peak_active": alloc.stats.peak_active,
+            "utilization": alloc.stats.utilization,
+            "state_counts": dict(alloc.state_counts),
+            "n_trace_events": len(self.recorder.trace),
+        }

@@ -1,0 +1,1 @@
+"""Training: optimizer, train state, step builders."""

@@ -1,0 +1,80 @@
+"""AdamW (hand-rolled, pytree-based) with ZeRO-shardable moments.
+
+Moments reuse the parameters' logical axes, so ``tree_shardings(...,
+zero=True)`` shards them over data+model — ZeRO-1/2/3 is purely a sharding
+decision here, not a different optimizer. Moment dtype is configurable
+(bf16 halves optimizer HBM for the 100B+ archs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init(cfg: AdamWConfig, params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)  # noqa: E731
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def opt_axes(params_axes) -> OptState:
+    """Logical axes for the optimizer state mirror the params."""
+    return OptState(mu=params_axes, nu=params_axes, count=())
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        step = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - cfg.lr * step
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), {"grad_norm": gnorm}

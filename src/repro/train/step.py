@@ -1,0 +1,93 @@
+"""Train / serve step builders: loss -> grads -> AdamW, with optional
+gradient accumulation; single-token decode for serving."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import family_of
+from . import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.OptState
+    step: jax.Array
+
+
+def init_state(cfg, adamw: opt.AdamWConfig, key) -> TrainState:
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, key)
+    return TrainState(params=params, opt=opt.init(adamw, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_axes(cfg) -> TrainState:
+    fam = family_of(cfg)
+    axes = fam.param_axes(cfg)
+    return TrainState(params=axes, opt=opt.opt_axes(axes), step=())
+
+
+def make_train_step(
+    cfg,
+    adamw: opt.AdamWConfig,
+    sharder=None,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    fam = family_of(cfg)
+    sharder = sharder or (lambda x, names: x)
+
+    def loss_of(params, batch):
+        return fam.loss_fn(cfg, params, batch, sharder=sharder)
+
+    def train_step(state: TrainState, batch: Dict):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def acc(carry, micro):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(state.params, micro)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+
+        new_params, new_opt, metrics = opt.apply(adamw, state.params, grads, state.opt)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg, sharder=None):
+    """Returns (prefill_fn(params, batch, cache), decode_fn(params, cache,
+    tokens)) — the two serving entry points."""
+    fam = family_of(cfg)
+    sharder = sharder or (lambda x, names: x)
+
+    def prefill_fn(params, batch, cache):
+        return fam.prefill(cfg, params, batch, cache, sharder=sharder)
+
+    def decode_fn(params, cache, tokens):
+        return fam.decode_step(cfg, params, cache, tokens, sharder=sharder)
+
+    return prefill_fn, decode_fn

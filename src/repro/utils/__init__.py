@@ -1,0 +1,1 @@
+"""Analysis utilities: scan-aware HLO walker, roofline model."""

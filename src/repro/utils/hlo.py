@@ -1,0 +1,271 @@
+"""Optimized-HLO analysis: scan-aware FLOPs / bytes / collective traffic.
+
+``compiled.cost_analysis()`` counts while-loop (scan) bodies ONCE — a
+framework whose layers live under ``lax.scan`` would report ~1/L of its
+real FLOPs and drop every collective inside the layer loop. This module
+re-walks the optimized per-device HLO text with loop multipliers taken
+from XLA's ``known_trip_count`` backend configs:
+
+  * flops: 2*M*N*K for every ``dot`` (+1/elem for arithmetic elementwise),
+    multiplied through the while/call/fusion graph;
+  * bytes: operand+result bytes of every non-fused memory-level op (fusion
+    internals touch registers/VMEM, not HBM — only the fusion's own
+    operands/results count), i.e. a static HBM-traffic proxy;
+  * collectives: per-type count and result bytes (per-device received
+    bytes), trip-multiplied — ZeRO gathers inside the layer scan are the
+    dominant term and are invisible to cost_analysis.
+
+Convention: all quantities are per device per step (the module is the
+per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: elementwise/transcendental opcodes counted at 1 flop per output element
+_EW_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "logistic", "negate",
+    "compare", "select", "and", "or", "xor", "abs", "floor", "ceil",
+    "cosine", "sine", "atan2", "remainder", "clamp", "exponential-minus-one",
+}
+
+#: memory-level opcodes whose operands+result approximate HBM traffic
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "transpose", "reshape",
+    "broadcast", "dynamic-slice", "dynamic-update-slice", "gather",
+    "scatter", "concatenate", "pad", "slice", "convert", "reduce",
+    "reverse", "iota", "rng", "sort", "copy-start", "custom-call", "map",
+    "select-and-scatter", "reduce-window", "cholesky", "triangular-solve",
+} | set(COLLECTIVE_OPS)
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-done", "while",
+    "conditional", "call",
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """total elements and bytes across all shapes in a (possibly tuple) type."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # remainder of the line after the opening paren
+
+
+@dataclass
+class ModuleStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "ModuleStats":
+        return ModuleStats(
+            self.flops * k, self.traffic_bytes * k, self.collective_bytes * k,
+            {
+                op: {"count": v["count"] * k, "bytes": v["bytes"] * k}
+                for op, v in self.collectives.items()
+            },
+        )
+
+    def add(self, other: "ModuleStats") -> None:
+        self.flops += other.flops
+        self.traffic_bytes += other.traffic_bytes
+        self.collective_bytes += other.collective_bytes
+        for op, v in other.collectives.items():
+            slot = self.collectives.setdefault(op, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += v["count"]
+            slot["bytes"] += v["bytes"]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[Tuple[str, bool], ModuleStats] = {}
+
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        ops: List[Op] = []
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                current = hdr.group(2)
+                ops = []
+                self.computations[current] = ops
+                if hdr.group(1):
+                    self.entry = current
+                continue
+            if line.startswith("}"):
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, op: Op, shapes: Dict[str, str]) -> float:
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        operands = _OPERANDS_RE.findall(op.rest.split(")", 1)[0])
+        cdims = _LHS_CDIMS_RE.search(op.rest)
+        k = 1
+        if operands and cdims and operands[0] in shapes:
+            lhs_dims = _first_shape_dims(shapes[operands[0]])
+            for ci in cdims.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    k *= lhs_dims[int(ci)]
+        return 2.0 * out_elems * k
+
+    def _comp_stats(self, name: str, in_fusion: bool) -> ModuleStats:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        stats = ModuleStats()
+        self._memo[key] = stats  # breaks accidental cycles
+        shapes: Dict[str, str] = {}
+        for op in self.computations.get(name, ()):
+            shapes[op.name] = op.type_str
+        for op in self.computations.get(name, ()):
+            oc = op.opcode
+            if oc == "while":
+                cb = _COND_BODY_RE.search(op.rest)
+                trip_m = _TRIP_RE.search(op.rest)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if cb:
+                    body = self._comp_stats(cb.group(2), in_fusion)
+                    cond = self._comp_stats(cb.group(1), in_fusion)
+                    stats.add(body.scaled(trip))
+                    stats.add(cond.scaled(trip))
+                continue
+            if oc == "fusion":
+                cm = _CALLS_RE.search(op.rest)
+                if cm:
+                    stats.add(self._comp_stats(cm.group(1), True))
+                stats.add(self._op_traffic(op, shapes, in_fusion))
+                continue
+            if oc in ("call", "conditional", "async-start", "custom-call"):
+                for target in _TO_APPLY_RE.findall(op.rest) + _CALLS_RE.findall(op.rest):
+                    stats.add(self._comp_stats(target, in_fusion))
+                stats.add(self._op_traffic(op, shapes, in_fusion))
+                continue
+            # plain op
+            if oc == "dot":
+                stats.flops += self._dot_flops(op, shapes)
+            elif oc in _EW_FLOP_OPS:
+                out_elems, _ = _shape_elems_bytes(op.type_str)
+                stats.flops += out_elems
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVE_OPS:
+                _, nbytes = _shape_elems_bytes(op.type_str)
+                stats.collective_bytes += nbytes
+                slot = stats.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0})
+                slot["count"] += 1
+                slot["bytes"] += nbytes
+            stats.add(self._op_traffic(op, shapes, in_fusion))
+        return stats
+
+    def _op_traffic(self, op: Op, shapes: Dict[str, str], in_fusion: bool) -> ModuleStats:
+        s = ModuleStats()
+        if in_fusion:
+            return s
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base not in _TRAFFIC_OPS or op.opcode in _SKIP_OPS:
+            return s
+        _, out_b = _shape_elems_bytes(op.type_str)
+        s.traffic_bytes += out_b
+        operand_str = op.rest.split("), ", 1)[0] if "), " in op.rest else op.rest
+        for oname in _OPERANDS_RE.findall(operand_str):
+            if oname in shapes:
+                _, b = _shape_elems_bytes(shapes[oname])
+                s.traffic_bytes += b
+        return s
+
+    def stats(self) -> ModuleStats:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self._comp_stats(self.entry, False)
+
+
+def analyze(hlo_text: str) -> ModuleStats:
+    return HloModule(hlo_text).stats()
+
+
+# ---------------------------------------------------------------------------
+# legacy helpers (flat regex scans, no loop multipliers) — kept for tests
+# ---------------------------------------------------------------------------
+
+_FLAT_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Scan-aware per-type collective stats."""
+    return analyze(hlo_text).collectives
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return int(analyze(hlo_text).collective_bytes)
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "convolution", "dot")) -> Dict[str, int]:
+    census = {}
+    for op in ops:
+        census[op] = len(re.findall(rf"\b{op}\(", hlo_text))
+    return census
