@@ -1,0 +1,91 @@
+"""Replay-throughput benchmark: host-side allocator events/sec.
+
+GMLake's pitch is that VMS defragmentation is cheap enough to sit on the
+allocation hot path (paper §4.3); this benchmark makes that a first-class,
+regression-tracked number. For each (trace x allocator) pair it replays the
+event stream through ``replay_batched`` and reports host µs/event
+(``us_per_call``) and events/sec (``derived``). Device-API cost is modeled
+elsewhere (alloc_latency); everything here is real measured wall time of the
+allocator data structures plus the replay loop.
+
+Also emits machine-readable ``BENCH_replay.json`` (see BENCHMARKS.md) with
+the rows plus the recorded seed-implementation baseline, so every future PR
+can state its before/after events/sec without re-checking out the seed.
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    GB,
+    PAPER_MODELS,
+    VMMDevice,
+    inference_trace,
+    replay_batched,
+    training_trace,
+)
+from repro.core.caching_allocator import CachingAllocator, NativeAllocator
+from repro.core.gmlake import GMLakeAllocator
+
+from .common import Row, emit, emit_json
+
+ALLOCATORS = {
+    "native": NativeAllocator,
+    "caching": CachingAllocator,
+    "gmlake": GMLakeAllocator,
+}
+
+#: Seed-implementation µs/event measured on the pre-rewrite allocator core
+#: (sort-on-StitchFree, O(n) sBlock removal, unpartitioned inactive pool,
+#: per-event replay loop) with the identical traces/seeds on the reference
+#: machine. Recorded once when this harness landed; kept as the "before" half
+#: of BENCH_replay.json so speedups are reported against a fixed baseline.
+SEED_US_PER_EVENT = {
+    "train_opt13b_LRO/caching": 13.3,
+    "train_opt13b_LRO/gmlake": 25.3,
+    "serve_vicuna_4k/caching": 10.2,
+    "serve_vicuna_4k/gmlake": 494.7,
+    "serve_vicuna_120k/caching": 11.6,
+    "serve_vicuna_120k/gmlake": 3872.2,
+}
+
+
+def _traces(fast: bool):
+    train = training_trace(
+        PAPER_MODELS["opt-13b"], "LRO", world=4, batch=8, seq=2048, iters=8, seed=0
+    )
+    n_req = 2000 if fast else 60000
+    serve = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=n_req, seed=0)
+    serve_name = f"serve_vicuna_{len(serve.events) // 1000}k"
+    return [("train_opt13b_LRO", train), (serve_name, serve)]
+
+
+def bench_rows(fast: bool) -> list:
+    rows = []
+    for tname, trace in _traces(fast):
+        n_events = len(trace.events)
+        for aname, cls in ALLOCATORS.items():
+            allocator = cls(VMMDevice(80 * GB))
+            res, _marks = replay_batched(trace, allocator)
+            us_per_event = res.wall_seconds / n_events * 1e6
+            events_per_sec = n_events / res.wall_seconds
+            name = f"{tname}/{aname}"
+            seed_us = SEED_US_PER_EVENT.get(name)
+            extra = f"seed:{seed_us:.1f}us x{seed_us / us_per_event:.2f}" if seed_us else ""
+            rows.append(Row(name, us_per_event, events_per_sec, extra))
+    return rows
+
+
+def run(fast: bool = False) -> None:
+    rows = bench_rows(fast)
+    emit(rows, "replay throughput: host us/event, events/sec (derived)")
+    emit_json(
+        "replay",
+        {
+            "benchmark": "replay_throughput",
+            "fast": fast,
+            "unit": {"us_per_call": "host microseconds per event",
+                     "derived": "events per second"},
+            "rows": [r.as_dict() for r in rows],
+            "seed_us_per_event": SEED_US_PER_EVENT,
+        },
+    )

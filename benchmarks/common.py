@@ -7,6 +7,8 @@ figure's headline metric (utilization / GB saved / ratio ...).
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
@@ -31,6 +33,12 @@ class Row:
         base = f"{self.name},{self.us_per_call:.1f},{self.derived:.6g}"
         return base + (f",{self.extra}" if self.extra else "")
 
+    def as_dict(self) -> dict:
+        d = {"name": self.name, "us_per_call": self.us_per_call, "derived": self.derived}
+        if self.extra:
+            d["extra"] = self.extra
+        return d
+
 
 def timed(fn: Callable, *args, **kwargs):
     t0 = time.perf_counter()
@@ -43,3 +51,19 @@ def emit(rows: List[Row], header: Optional[str] = None) -> None:
         print(f"# {header}")
     for r in rows:
         print(r.csv())
+
+
+def emit_json(name: str, payload: dict) -> str:
+    """Write machine-readable benchmark output to ``BENCH_<name>.json``.
+
+    Output lands in $BENCH_OUTPUT_DIR (default: cwd) so CI and future PRs
+    have a perf trajectory to diff against; see BENCHMARKS.md for the schema.
+    """
+    out_dir = os.environ.get("BENCH_OUTPUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path

@@ -10,12 +10,14 @@ Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
     end2end        Fig 13    (batch sweep + OOM frontier + throughput)
     trace          Fig 14    (memory timeline + S1 convergence)
     serving        beyond-paper: stitched KV arena under churn
+    replay         host-side replay throughput (events/sec + BENCH_replay.json)
     roofline       assignment: dry-run roofline table
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
@@ -29,6 +31,7 @@ def main() -> None:
         bench_alloc_latency,
         bench_end2end,
         bench_platforms,
+        bench_replay_throughput,
         bench_scaleout,
         bench_serving,
         bench_strategies,
@@ -44,8 +47,16 @@ def main() -> None:
         "end2end": bench_end2end,
         "trace": bench_trace,
         "serving": bench_serving,
+        "replay": bench_replay_throughput,
         "roofline": roofline_all,
     }
+    if args.only is not None and args.only not in modules:
+        print(
+            f"error: unknown benchmark {args.only!r}; valid names: "
+            + ", ".join(sorted(modules)),
+            file=sys.stderr,
+        )
+        sys.exit(2)
     names = [args.only] if args.only else list(modules)
     t0 = time.time()
     for name in names:

@@ -35,6 +35,7 @@ from .trace import (
     TraceRecorder,
     inference_trace,
     replay,
+    replay_batched,
     run_workload,
     training_trace,
 )
@@ -69,6 +70,7 @@ __all__ = [
     "TraceRecorder",
     "inference_trace",
     "replay",
+    "replay_batched",
     "run_workload",
     "training_trace",
 ]

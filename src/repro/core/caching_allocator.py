@@ -16,7 +16,7 @@ device synchronization on free) used to reproduce the ~10x overhead claim.
 from __future__ import annotations
 
 import itertools
-from bisect import insort
+from bisect import bisect_left, insort
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -86,6 +86,12 @@ class CachingAllocator:
         self._free: Dict[str, List[tuple]] = {"small": [], "large": []}
         self._segments: Dict[int, Segment] = {}
         self._reserved = 0
+        # running cached-free byte totals per pool (no scan needed to answer
+        # "how much could release_cached reclaim / best-fit possibly cover")
+        self._free_bytes: Dict[str, int] = {"small": 0, "large": 0}
+        # seg_id -> block for free blocks spanning their whole segment; kept
+        # in lockstep with the free lists so release_cached is O(released)
+        self._releasable: Dict[str, Dict[int, BFCBlock]] = {"small": {}, "large": {}}
 
     # -- policy helpers -------------------------------------------------------
     @staticmethod
@@ -112,24 +118,37 @@ class CachingAllocator:
 
     # -- free-list ops --------------------------------------------------------
     def _free_insert(self, block: BFCBlock) -> None:
-        insort(self._free[block.segment.pool], (block.size, block.block_id, block))
+        pool = block.segment.pool
+        insort(self._free[pool], (block.size, block.block_id, block))
+        self._free_bytes[pool] += block.size
+        if block.prev is None and block.next is None:
+            # the block spans its whole segment: a release_cached candidate.
+            # Splitting never turns a prev/next into None and adjacent free
+            # blocks always coalesce, so whole-segment status can only change
+            # through this insert/remove pair.
+            self._releasable[pool][block.segment.seg_id] = block
 
     def _free_remove(self, block: BFCBlock) -> None:
-        lst = self._free[block.segment.pool]
-        from bisect import bisect_left
-
+        pool = block.segment.pool
+        lst = self._free[pool]
         i = bisect_left(lst, (block.size, block.block_id, block))
         assert i < len(lst) and lst[i][2] is block, "free-list corruption"
         lst.pop(i)
+        self._free_bytes[pool] -= block.size
+        self._releasable[pool].pop(block.segment.seg_id, None)
 
     def _find_best_fit(self, pool: str, size: int) -> Optional[BFCBlock]:
-        from bisect import bisect_left
-
         lst = self._free[pool]
         i = bisect_left(lst, (size, -1, None))
         if i < len(lst):
             return lst[i][2]
         return None
+
+    def cached_free_bytes(self, pool: Optional[str] = None) -> int:
+        """Bytes sitting in free blocks (per pool, or total)."""
+        if pool is not None:
+            return self._free_bytes[pool]
+        return sum(self._free_bytes.values())
 
     # -- segment management ---------------------------------------------------
     def _new_segment(self, size: int, pool: str) -> BFCBlock:
@@ -140,21 +159,20 @@ class CachingAllocator:
         return BFCBlock(seg, 0, size)
 
     def release_cached(self) -> int:
-        """Free fully-free segments back to the device. Returns bytes freed."""
+        """Free fully-free segments back to the device. Returns bytes freed.
+
+        Incremental: walks only the maintained whole-segment-free table, not
+        every free block, so the cost is O(segments released).
+        """
         freed = 0
-        for pool, lst in self._free.items():
-            keep = []
-            for size, bid, block in lst:
+        for table in self._releasable.values():
+            for block in list(table.values()):
                 seg = block.segment
-                if block.prev is None and block.next is None:
-                    # whole segment is one free block
-                    self.device.cu_free(seg.size, synchronize=False)
-                    del self._segments[seg.seg_id]
-                    self._reserved -= seg.size
-                    freed += seg.size
-                else:
-                    keep.append((size, bid, block))
-            self._free[pool] = keep
+                self._free_remove(block)  # also clears the table entry
+                self.device.cu_free(seg.size, synchronize=False)
+                del self._segments[seg.seg_id]
+                self._reserved -= seg.size
+                freed += seg.size
         return freed
 
     # -- public API -----------------------------------------------------------
@@ -221,11 +239,16 @@ class CachingAllocator:
         return self._reserved
 
     def check_invariants(self) -> None:
-        """Debug: free lists consistent with block links."""
+        """Debug: free lists consistent with block links + running counters."""
         for pool, lst in self._free.items():
             assert lst == sorted(lst), f"{pool} free list unsorted"
+            whole = {}
             for size, bid, block in lst:
                 assert not block.allocated and block.size == size
+                if block.prev is None and block.next is None:
+                    whole[block.segment.seg_id] = block
+            assert self._free_bytes[pool] == sum(e[0] for e in lst)
+            assert self._releasable[pool] == whole
 
 
 class NativeAllocator:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Iterable, List, Optional
 
 MB = 1024 * 1024
@@ -114,7 +115,10 @@ CUFREE_COST = 1.0
 DEVICE_SYNC_COST = 4.0
 
 
+@lru_cache(maxsize=None)
 def _per_call_cost(api: str, chunk_size: int) -> float:
+    """Pure log-log interpolation of Table 1; cached — it sits on the
+    per-allocation ledger path and only ever sees a handful of chunk sizes."""
     totals = _TABLE1_TOTALS[api]
     if api == "cuMemAddressReserve":
         # one call regardless of chunking; interpolate the totals directly

@@ -30,7 +30,9 @@ from __future__ import annotations
 
 import itertools
 from bisect import bisect_left, insort
-from typing import Dict, List, Optional, Tuple
+from heapq import heapify, heappop, heappush
+from itertools import chain
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
 from .chunks import (
@@ -49,7 +51,7 @@ _ids = itertools.count()
 
 
 class PBlock:
-    __slots__ = ("pid", "size", "chunks", "active", "sblocks", "va")
+    __slots__ = ("pid", "size", "chunks", "active", "sblocks", "va", "_extents")
 
     def __init__(self, chunks: List[int], va: int = 0):
         self.pid = next(_ids)
@@ -58,25 +60,48 @@ class PBlock:
         self.active = False
         self.sblocks: set = set()
         self.va = va
+        self._extents: Optional[List[Extent]] = None
 
     @property
     def extents(self) -> List[Extent]:
-        return pack_extents(self.chunks)
+        # chunks are immutable after construction (Split creates new pBlocks),
+        # so the packed form is computed once and reused by every kernel call.
+        if self._extents is None:
+            self._extents = pack_extents(self.chunks)
+        return self._extents
 
     def __repr__(self):
         return f"PBlock(id={self.pid}, size={self.size >> 20}MB, active={self.active})"
 
 
 class SBlock:
-    __slots__ = ("sid", "size", "pblocks", "active_members", "va", "last_use")
+    __slots__ = (
+        "sid", "size", "pblocks", "active_members", "va", "last_use",
+        "_chunks", "_extents",
+    )
 
-    def __init__(self, pblocks: List[PBlock], tick: int, va: int = 0):
+    def __init__(
+        self,
+        pblocks: List[PBlock],
+        tick: int,
+        va: int = 0,
+        size: Optional[int] = None,
+        active_members: Optional[int] = None,
+    ):
         self.sid = next(_ids)
         self.pblocks = list(pblocks)
-        self.size = sum(p.size for p in pblocks)
-        self.active_members = sum(1 for p in pblocks if p.active)
+        # callers that already know the totals pass them in; both are
+        # cross-checked against the members by check_invariants()
+        self.size = sum(p.size for p in pblocks) if size is None else size
+        self.active_members = (
+            sum(1 for p in pblocks if p.active)
+            if active_members is None
+            else active_members
+        )
         self.va = va
         self.last_use = tick
+        self._chunks: Optional[List[int]] = None
+        self._extents: Optional[List[Extent]] = None
         for p in pblocks:
             p.sblocks.add(self)
 
@@ -86,14 +111,20 @@ class SBlock:
 
     @property
     def chunks(self) -> List[int]:
-        out: List[int] = []
-        for p in self.pblocks:
-            out.extend(p.chunks)
-        return out
+        # Split substitutes member pBlocks with halves covering the identical
+        # chunk sequence, so the concatenation can be cached forever.
+        if self._chunks is None:
+            out: List[int] = []
+            for p in self.pblocks:
+                out.extend(p.chunks)
+            self._chunks = out
+        return self._chunks
 
     @property
     def extents(self) -> List[Extent]:
-        return pack_extents(self.chunks)
+        if self._extents is None:
+            self._extents = pack_extents(self.chunks)
+        return self._extents
 
     def __repr__(self):
         return (
@@ -106,44 +137,129 @@ def _key(block) -> int:
     return block.pid if isinstance(block, PBlock) else block.sid
 
 
-class _SortedPool:
-    """Ascending (size, id) sorted pool of *inactive* blocks."""
+class _IndexedPool:
+    """Pool of *inactive* blocks indexed by size.
+
+    Selection and iteration order is identical to a single (size, id)-sorted
+    list — S1 exact match, S2 best-fit, S3 largest-first — but add/remove only
+    touch one per-size bucket (typically a handful of blocks) instead of
+    shifting a pool-wide array, and the byte total is a running counter.
+    Block sizes are chunk multiples, so the number of distinct sizes is small
+    compared to the number of blocks; the `_sizes` index only changes when a
+    bucket is created or emptied.
+    """
+
+    __slots__ = ("_buckets", "_sizes", "_count", "bytes")
 
     def __init__(self):
-        self._lst: List[tuple] = []
+        self._buckets: Dict[int, List[tuple]] = {}  # size -> [(id, block)] asc
+        self._sizes: List[int] = []  # ascending distinct sizes
+        self._count = 0
+        self.bytes = 0  # running sum of member sizes
 
     def __len__(self):
-        return len(self._lst)
+        return self._count
 
     def __iter__(self):
-        return (e[2] for e in self._lst)
+        for size in self._sizes:
+            for _k, b in self._buckets[size]:
+                yield b
 
     def add(self, block) -> None:
-        insort(self._lst, (block.size, _key(block), block))
+        size = block.size
+        bucket = self._buckets.get(size)
+        if bucket is None:
+            bucket = self._buckets[size] = []
+            insort(self._sizes, size)
+        insort(bucket, (_key(block), block))
+        self._count += 1
+        self.bytes += size
 
     def remove(self, block) -> None:
-        i = bisect_left(self._lst, (block.size, _key(block), block))
-        assert i < len(self._lst) and self._lst[i][2] is block, "pool corruption"
-        self._lst.pop(i)
+        size = block.size
+        bucket = self._buckets[size]
+        if len(bucket) == 1:
+            assert bucket[0][1] is block, "pool corruption"
+            del self._buckets[size]
+            self._sizes.pop(bisect_left(self._sizes, size))
+        else:
+            i = bisect_left(bucket, (_key(block),))
+            assert i < len(bucket) and bucket[i][1] is block, "pool corruption"
+            bucket.pop(i)
+        self._count -= 1
+        self.bytes -= size
 
     def exact(self, size: int):
-        i = bisect_left(self._lst, (size, -1, None))
-        if i < len(self._lst) and self._lst[i][0] == size:
-            return self._lst[i][2]
-        return None
+        bucket = self._buckets.get(size)
+        return bucket[0][1] if bucket else None
 
     def best_fit_at_least(self, size: int):
         """Smallest block with block.size >= size."""
-        i = bisect_left(self._lst, (size, -1, None))
-        if i < len(self._lst):
-            return self._lst[i][2]
+        i = bisect_left(self._sizes, size)
+        if i < len(self._sizes):
+            return self._buckets[self._sizes[i]][0][1]
         return None
 
-    def descending(self):
-        return (e[2] for e in reversed(self._lst))
+    def descending(self) -> Iterator:
+        for size in reversed(self._sizes):
+            bucket = self._buckets[size]
+            for i in range(len(bucket) - 1, -1, -1):
+                yield bucket[i][1]
 
-    def total_bytes(self) -> int:
-        return sum(e[0] for e in self._lst)
+
+class _PartitionedPool:
+    """Inactive pBlock pool split at the fragmentation limit (paper §4.2.3).
+
+    Blocks >= the limit are legal stitch sources ("main"), blocks below it
+    are not ("sub"). Keeping them in separate indexed pools means the S3/S4
+    candidate scan never even sees sub-limit blocks, and the running
+    ``main.bytes`` total answers "can the pool cover this request at all?"
+    in O(1). A block's
+    partition is a pure function of its size, so exact/best-fit routing stays
+    order-identical to one combined (size, id)-sorted pool.
+    """
+
+    __slots__ = ("frag_limit", "main", "sub")
+
+    def __init__(self, frag_limit: int):
+        self.frag_limit = frag_limit
+        self.main = _IndexedPool()  # size >= frag_limit: stitch sources
+        self.sub = _IndexedPool()  # size < frag_limit: reuse/split only
+
+    def _pool_for(self, size: int) -> _IndexedPool:
+        return self.sub if size < self.frag_limit else self.main
+
+    def __len__(self):
+        return len(self.main) + len(self.sub)
+
+    def __iter__(self):
+        # ascending (size, id): every sub size < frag_limit <= every main size
+        return chain(iter(self.sub), iter(self.main))
+
+    def add(self, block) -> None:
+        self._pool_for(block.size).add(block)
+
+    def remove(self, block) -> None:
+        self._pool_for(block.size).remove(block)
+
+    def exact(self, size: int):
+        return self._pool_for(size).exact(size)
+
+    def best_fit_at_least(self, size: int):
+        if size < self.frag_limit:
+            blk = self.sub.best_fit_at_least(size)
+            if blk is not None:  # any sub hit is smaller than every main block
+                return blk
+        return self.main.best_fit_at_least(size)
+
+    def descending(self, include_sub: bool) -> Iterator:
+        if include_sub:
+            return chain(self.main.descending(), self.sub.descending())
+        return self.main.descending()
+
+    @property
+    def bytes(self) -> int:
+        return self.main.bytes + self.sub.bytes
 
 
 class GMLakeAllocator:
@@ -174,10 +290,17 @@ class GMLakeAllocator:
         self.stats = AllocatorStats(record_timeline=record_timeline)
         self.state_counts: Dict[str, int] = {f"S{i}": 0 for i in range(1, 6)}
 
-        self._inactive_p = _SortedPool()
-        self._inactive_s = _SortedPool()
+        self._inactive_p = _PartitionedPool(frag_limit)
+        self._inactive_s = _IndexedPool()
         self._pblocks: Dict[int, PBlock] = {}  # registry of all live pBlocks
-        self._all_sblocks: List[SBlock] = []
+        self._sblocks: Dict[int, SBlock] = {}  # registry of all live sBlocks
+        # StitchFree LRU: lazy-invalidation min-heap of (last_use, sid).
+        # Entries are pushed whenever an sBlock becomes inactive (or its
+        # last_use is refreshed while inactive); stale entries are skipped at
+        # pop time, so eviction is O(evicted * log n) instead of a full sort.
+        # (last_use, sid) matches the seed's stable sort of the append-only
+        # sBlock list: sids are monotone in creation order.
+        self._lru_heap: List[Tuple[int, int]] = []
         self._sblock_va_bytes = 0
         self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
         self._tick = 0
@@ -216,6 +339,61 @@ class GMLakeAllocator:
             assert s.active_members >= 0
             if s.active_members == 0:
                 self._inactive_s.add(s)
+                heappush(self._lru_heap, (s.last_use, s.sid))
+
+    # Batch variants of the two flips above for the stitched paths, where one
+    # malloc/free touches every member pBlock (~dozens to hundreds on serving
+    # traces). Semantics are identical; the pool bucket updates are inlined
+    # because per-member function-call overhead dominates the replay hot path.
+    def _activate_many(self, pblocks: List[PBlock]) -> None:
+        limit = self.frag_limit
+        sub, main = self._inactive_p.sub, self._inactive_p.main
+        inactive_s_remove = self._inactive_s.remove
+        for p in pblocks:
+            assert not p.active
+            size = p.size
+            pool = sub if size < limit else main
+            bucket = pool._buckets[size]
+            if len(bucket) == 1:
+                assert bucket[0][1] is p, "pool corruption"
+                del pool._buckets[size]
+                sizes = pool._sizes
+                sizes.pop(bisect_left(sizes, size))
+            else:
+                i = bisect_left(bucket, (p.pid,))
+                assert bucket[i][1] is p, "pool corruption"
+                bucket.pop(i)
+            pool._count -= 1
+            pool.bytes -= size
+            p.active = True
+            for s in p.sblocks:
+                if s.active_members == 0:
+                    inactive_s_remove(s)
+                s.active_members += 1
+
+    def _deactivate_many(self, pblocks: List[PBlock]) -> None:
+        limit = self.frag_limit
+        sub, main = self._inactive_p.sub, self._inactive_p.main
+        inactive_s_add = self._inactive_s.add
+        heap = self._lru_heap
+        for p in pblocks:
+            assert p.active
+            p.active = False
+            size = p.size
+            pool = sub if size < limit else main
+            bucket = pool._buckets.get(size)
+            if bucket is None:
+                bucket = pool._buckets[size] = []
+                insort(pool._sizes, size)
+            insort(bucket, (p.pid, p))
+            pool._count += 1
+            pool.bytes += size
+            for s in p.sblocks:
+                m = s.active_members - 1
+                s.active_members = m
+                if m == 0:
+                    inactive_s_add(s)
+                    heappush(heap, (s.last_use, s.sid))
 
     # ------------------------------------------------------------------
     # primitive operations: Alloc / Split / Stitch / StitchFree
@@ -258,15 +436,25 @@ class GMLakeAllocator:
         self._inactive_p.add(b)
         return a, b
 
-    def _stitch(self, pblocks: List[PBlock]) -> SBlock:
+    def _stitch(
+        self,
+        pblocks: List[PBlock],
+        total_size: Optional[int] = None,
+        active_members: Optional[int] = None,
+    ) -> SBlock:
         """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create."""
-        n = sum(len(p.chunks) for p in pblocks)
+        if total_size is None:
+            total_size = sum(p.size for p in pblocks)
+        n = total_size // CHUNK_SIZE  # == total member chunk count
         self.device.vmm_map_existing(n)
-        s = SBlock(pblocks, tick=self._tick)
-        self._all_sblocks.append(s)
+        s = SBlock(
+            pblocks, tick=self._tick, size=total_size, active_members=active_members
+        )
+        self._sblocks[s.sid] = s
         self._sblock_va_bytes += s.size
         if s.active_members == 0:
             self._inactive_s.add(s)
+            heappush(self._lru_heap, (s.last_use, s.sid))
         self._maybe_stitch_free()
         return s
 
@@ -274,18 +462,19 @@ class GMLakeAllocator:
         """Paper's StitchFree: LRU-evict inactive sBlocks past the VA budget."""
         if self._sblock_va_bytes <= self.sblock_va_budget:
             return
-        victims = sorted(
-            (s for s in self._all_sblocks if not s.active), key=lambda s: s.last_use
-        )
-        for s in victims:
-            if self._sblock_va_bytes <= self.sblock_va_budget:
-                break
+        heap = self._lru_heap
+        sblocks = self._sblocks
+        while self._sblock_va_bytes > self.sblock_va_budget and heap:
+            last_use, sid = heappop(heap)
+            s = sblocks.get(sid)
+            if s is None or s.active_members > 0 or s.last_use != last_use:
+                continue  # stale entry: destroyed, re-activated, or refreshed
             self._destroy_sblock(s)
 
     def _destroy_sblock(self, s: SBlock) -> None:
         if s.active_members == 0:
             self._inactive_s.remove(s)
-        self._all_sblocks.remove(s)
+        del self._sblocks[s.sid]
         self._sblock_va_bytes -= s.size
         for p in s.pblocks:
             p.sblocks.discard(s)
@@ -296,31 +485,55 @@ class GMLakeAllocator:
     # BestFit — Algorithm 1
     # ------------------------------------------------------------------
     def _best_fit(self, bsize: int, ignore_frag_limit: bool = False):
-        """Returns (state, candidate blocks). States 1..4 as in the paper."""
+        """Returns (state, candidate blocks, candidate bytes). States 1..4."""
         # S1: exact match over inactive sBlocks U pBlocks (the only state in
         # which an sBlock may be assigned).
         blk = self._inactive_p.exact(bsize)
         if blk is None:
             blk = self._inactive_s.exact(bsize)
         if blk is not None:
-            return 1, [blk]
+            return 1, [blk], bsize
 
         # S2: single best-fit pBlock >= bsize.
         single = self._inactive_p.best_fit_at_least(bsize)
         if single is not None:
-            return 2, [single]
+            return 2, [single], single.size
 
         # S3/S4: accumulate largest-first until the sum covers the request.
-        cb: List[PBlock] = []
+        # Blocks below the frag limit are not stitch sources (paper §4.2.3),
+        # which the partitioned pool encodes structurally: the scan only sees
+        # legal candidates, and the running byte totals decide S3-vs-S4
+        # before touching a single block.
+        if ignore_frag_limit:
+            pool_bytes = self._inactive_p.bytes
+            candidates = self._inactive_p.descending(include_sub=True)
+            if pool_bytes < bsize:  # S4: even the whole pool cannot cover it
+                return 4, list(candidates), pool_bytes
+            cb: List[PBlock] = []
+            cb_size = 0
+            for p in candidates:
+                cb.append(p)
+                cb_size += p.size
+                if cb_size >= bsize:
+                    return 3, cb, cb_size
+            raise AssertionError("pool byte counter out of sync with contents")
+
+        main = self._inactive_p.main
+        if main.bytes < bsize:  # S4: even the whole stitchable pool falls short
+            return 4, list(main.descending()), main.bytes
+        # S3 guaranteed: walk buckets largest-first inline (no generator frames)
+        cb = []
+        append = cb.append
         cb_size = 0
-        for p in self._inactive_p.descending():
-            if not ignore_frag_limit and p.size < self.frag_limit:
-                continue  # paper §4.2.3: blocks below the limit are not stitched
-            cb.append(p)
-            cb_size += p.size
-            if cb_size >= bsize:
-                return 3, cb
-        return 4, cb
+        buckets = main._buckets
+        for size in reversed(main._sizes):
+            bucket = buckets[size]
+            for i in range(len(bucket) - 1, -1, -1):
+                append(bucket[i][1])
+                cb_size += size
+                if cb_size >= bsize:
+                    return 3, cb, cb_size
+        raise AssertionError("pool byte counter out of sync with contents")
 
     # ------------------------------------------------------------------
     # allocation strategy (paper Fig. 9)
@@ -348,16 +561,17 @@ class GMLakeAllocator:
         return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
 
     def _malloc_vms(self, bsize: int):
-        state, cb = self._best_fit(bsize)
+        state, cb, cb_size = self._best_fit(bsize)
         if state == 4:
             # If a fresh Alloc would not fit, first retry using every inactive
             # byte (ignore the frag limit), then drop cached small segments.
-            need = bsize - sum(p.size for p in cb)
+            need = bsize - cb_size
             if need > self.device.free_bytes:
-                state, cb = self._best_fit(bsize, ignore_frag_limit=True)
+                state, cb, cb_size = self._best_fit(bsize, ignore_frag_limit=True)
                 if state == 4:
-                    need = bsize - sum(p.size for p in cb)
-                    if need > self.device.free_bytes:
+                    need = bsize - cb_size
+                    # O(1) early-out: nothing cached means nothing to release
+                    if need > self.device.free_bytes and self._small.cached_free_bytes():
                         self._small.release_cached()
         self.state_counts[f"S{state}"] += 1
 
@@ -366,8 +580,7 @@ class GMLakeAllocator:
             if isinstance(blk, PBlock):
                 self._activate_p(blk)
             else:
-                for p in blk.pblocks:
-                    self._activate_p(p)
+                self._activate_many(blk.pblocks)
             return blk
 
         if state == 2:
@@ -380,11 +593,11 @@ class GMLakeAllocator:
             self._activate_p(a)
             # opportunistic stitch of the two halves preserves the original
             # size in the pattern tape (paper Fig. 9 state S2)
-            self._stitch([a, b])
+            self._stitch([a, b], total_size=p.size, active_members=1)
             return a
 
         if state == 3:
-            total = sum(p.size for p in cb)
+            total = cb_size
             if total > bsize:
                 last = cb[-1]
                 keep = last.size - (total - bsize)
@@ -394,19 +607,22 @@ class GMLakeAllocator:
             if len(cb) == 1:  # degenerate after split: a plain pBlock handout
                 self._activate_p(cb[0])
                 return cb[0]
-            for p in cb:
-                self._activate_p(p)
-            return self._stitch(cb)
+            self._activate_many(cb)  # every candidate is active at stitch time
+            return self._stitch(
+                cb, total_size=sum(p.size for p in cb), active_members=len(cb)
+            )
 
         # state == 4: insufficient inactive blocks -> Alloc new physical memory
-        have = sum(p.size for p in cb)
-        need = bsize - have
+        need = bsize - cb_size
         new_p = self._alloc_new(need)  # raises DeviceOOM -> S5 upstream
         if not cb:
             return new_p
-        for p in cb:
-            self._activate_p(p)
-        return self._stitch(cb + [new_p])
+        self._activate_many(cb)  # cb + the fresh Alloc are all active
+        return self._stitch(
+            cb + [new_p],
+            total_size=cb_size + new_p.size,
+            active_members=len(cb) + 1,
+        )
 
     # ------------------------------------------------------------------
     # deallocation: Update (no physical free)
@@ -416,15 +632,26 @@ class GMLakeAllocator:
         if isinstance(block, PBlock):
             self._deactivate_p(block)
         elif isinstance(block, SBlock):
-            for p in block.pblocks:
-                self._deactivate_p(p)
+            # refresh last_use first so the LRU entry pushed when the block
+            # flips inactive below already carries the post-free tick
             block.last_use = self._tick
+            self._deactivate_many(block.pblocks)
             self._maybe_stitch_free()  # budget may be enforceable only now
         else:  # small-pool block
             self._small.free(alloc)
             self.stats.on_free(alloc.block_size, self.reserved_bytes)
             return
         self.stats.on_free(alloc.block_size, self.reserved_bytes)
+        # lazy invalidation leaves stale entries behind; when they outnumber
+        # the live ones, rebuild from the inactive set (one valid entry per
+        # inactive sBlock) so heap memory stays O(inactive), not O(frees)
+        if len(self._lru_heap) > 64 + 4 * len(self._inactive_s):
+            self._compact_lru_heap()
+
+    def _compact_lru_heap(self) -> None:
+        heap = [(s.last_use, s.sid) for s in self._inactive_s]
+        heapify(heap)
+        self._lru_heap = heap
 
     # ------------------------------------------------------------------
     # debug / test support
@@ -439,12 +666,22 @@ class GMLakeAllocator:
             # active blocks are never pooled; inactive blocks always are
             assert (p.pid in inactive_ids) == (not p.active)
         inactive_s_ids = {s.sid for s in self._inactive_s}
-        for s in self._all_sblocks:
+        lru_entries = set(self._lru_heap)
+        for s in self._sblocks.values():
             assert s.size == sum(p.size for p in s.pblocks)
             assert s.active_members == sum(1 for p in s.pblocks if p.active)
             assert (s.sid in inactive_s_ids) == (not s.active)
+            if not s.active:  # every inactive sBlock is reachable by StitchFree
+                assert (s.last_use, s.sid) in lru_entries
             for p in s.pblocks:
                 assert s in p.sblocks
                 assert p.pid in self._pblocks
         assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
-        assert self._sblock_va_bytes == sum(s.size for s in self._all_sblocks)
+        assert self._sblock_va_bytes == sum(s.size for s in self._sblocks.values())
+        # partition routing + running byte counters
+        for pool, below in ((self._inactive_p.sub, True), (self._inactive_p.main, False)):
+            assert pool.bytes == sum(p.size for p in pool)
+            assert len(pool) == sum(1 for _ in pool)
+            for p in pool:
+                assert (p.size < self.frag_limit) == below
+        assert self._inactive_s.bytes == sum(s.size for s in self._inactive_s)

@@ -27,6 +27,14 @@ class AllocatorStats:
     timeline: List[tuple] = field(default_factory=list)
     record_timeline: bool = False
 
+    def __post_init__(self) -> None:
+        # on_alloc/on_free run once per replayed event; when no timeline is
+        # recorded, bind the branch-free fast variants so the hot path never
+        # re-tests record_timeline.
+        if not self.record_timeline:
+            self.on_alloc = self._on_alloc_fast
+            self.on_free = self._on_free_fast
+
     def on_alloc(self, active_delta: int, reserved: int) -> None:
         self.n_alloc += 1
         self.active_bytes += active_delta
@@ -42,6 +50,21 @@ class AllocatorStats:
         self.reserved_bytes = reserved
         if self.record_timeline:
             self.timeline.append((self.n_alloc + self.n_free, self.active_bytes, reserved))
+
+    def _on_alloc_fast(self, active_delta: int, reserved: int) -> None:
+        self.n_alloc += 1
+        active = self.active_bytes + active_delta
+        self.active_bytes = active
+        self.reserved_bytes = reserved
+        if active > self.peak_active:
+            self.peak_active = active
+        if reserved > self.peak_reserved:
+            self.peak_reserved = reserved
+
+    def _on_free_fast(self, active_delta: int, reserved: int) -> None:
+        self.n_free += 1
+        self.active_bytes -= active_delta
+        self.reserved_bytes = reserved
 
     @property
     def utilization(self) -> float:

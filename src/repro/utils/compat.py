@@ -1,0 +1,20 @@
+"""Version-compat shims for jax API drift.
+
+Import ``shard_map`` from here instead of from jax directly: jax >= 0.4.35
+exports it at top level with a ``check_vma`` kwarg, while older releases
+have it under ``jax.experimental`` with the kwarg named ``check_rep``.
+Future shims for drifting APIs (e.g. Pallas ``pltpu.MemorySpace``) belong
+in this module too — see ROADMAP.md Open items.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.4.35 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # older jax: experimental namespace + check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, /, *, check_vma=True, **kwargs):
+        return _shard_map_exp(f, check_rep=check_vma, **kwargs)
+
+__all__ = ["shard_map"]

@@ -1,0 +1,142 @@
+"""Golden-digest equivalence tests for the allocator hot-path rewrite.
+
+The indexed-pool / LRU-heap / cached-extent rewrite of the allocator core is
+a pure mechanical-sympathy optimization: for any trace it must produce the
+exact S1-S5 state counts, peak active/reserved bytes, and OOM points of the
+original (seed) implementation. The values below were recorded by replaying
+these fixed-seed traces through the seed implementation (commit 97c6e93);
+any drift here means the data-structure rewrite changed allocation policy.
+"""
+
+import pytest
+
+from repro.core import (
+    GB,
+    PAPER_MODELS,
+    VMMDevice,
+    inference_trace,
+    replay,
+    replay_batched,
+    training_trace,
+)
+from repro.core.caching_allocator import CachingAllocator
+from repro.core.gmlake import GMLakeAllocator
+
+# (trace key, allocator, capacity GB) -> digest recorded on the seed
+# implementation. state_counts is None for the caching allocator.
+GOLDEN = {
+    ("train_opt13b_LRO", "caching", 80): dict(
+        state_counts=None, peak_active=20049543168, peak_reserved=29087498240,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
+    ),
+    ("train_opt13b_LRO", "gmlake", 80): dict(
+        state_counts={"S1": 5193, "S2": 108, "S3": 121, "S4": 219, "S5": 0},
+        peak_active=20113784832, peak_reserved=20185088000,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
+    ),
+    # 20 GB device: the splitting allocator strands capacity and OOMs at
+    # event 12746; GMLake completes the same trace (the paper's core claim).
+    ("train_opt13b_LRO", "caching", 20): dict(
+        state_counts=None, peak_active=19430883328, peak_reserved=21422407680,
+        oom=True, oom_at_event=12746, n_alloc=6474, n_free=6265,
+    ),
+    ("train_opt13b_LRO", "gmlake", 20): dict(
+        state_counts={"S1": 5193, "S2": 108, "S3": 121, "S4": 219, "S5": 0},
+        peak_active=20113784832, peak_reserved=20185088000,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
+    ),
+    ("train_opt1.3b_LR", "caching", 80): dict(
+        state_counts=None, peak_active=7304380416, peak_reserved=11026825216,
+        oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
+    ),
+    ("train_opt1.3b_LR", "gmlake", 80): dict(
+        state_counts={"S1": 3143, "S2": 117, "S3": 12, "S4": 137, "S5": 0},
+        peak_active=7304380416, peak_reserved=7350517760,
+        oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
+    ),
+    ("serve_vicuna", "caching", 80): dict(
+        state_counts=None, peak_active=24018124800, peak_reserved=64181239808,
+        oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
+    ),
+    ("serve_vicuna", "gmlake", 80): dict(
+        state_counts={"S1": 16, "S2": 103, "S3": 1869, "S4": 12, "S5": 0},
+        peak_active=24027070464, peak_reserved=24672993280,
+        oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
+    ),
+    # 16 GB device: both allocators OOM at the same event with the same peaks
+    ("serve_vicuna", "caching", 16): dict(
+        state_counts=None, peak_active=15974301696, peak_reserved=15980298240,
+        oom=True, oom_at_event=7, n_alloc=7, n_free=0,
+    ),
+    ("serve_vicuna", "gmlake", 16): dict(
+        state_counts={"S1": 0, "S2": 0, "S3": 0, "S4": 8, "S5": 1},
+        peak_active=15980298240, peak_reserved=15980298240,
+        oom=True, oom_at_event=7, n_alloc=7, n_free=0,
+    ),
+}
+
+_ALLOCATORS = {"caching": CachingAllocator, "gmlake": GMLakeAllocator}
+
+
+def _trace(key):
+    if key == "train_opt13b_LRO":
+        return training_trace(
+            PAPER_MODELS["opt-13b"], "LRO", world=4, batch=8, seq=2048,
+            iters=8, seed=0,
+        )
+    if key == "train_opt1.3b_LR":
+        return training_trace(
+            PAPER_MODELS["opt-1.3b"], "LR", world=4, batch=8, seq=2048,
+            iters=8, seed=0,
+        )
+    if key == "serve_vicuna":
+        return inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=2000, seed=0)
+    raise KeyError(key)
+
+
+def _digest(res):
+    return dict(
+        state_counts=res.state_counts,
+        peak_active=res.stats.peak_active,
+        peak_reserved=res.stats.peak_reserved,
+        oom=res.oom,
+        oom_at_event=res.oom_at_event,
+        n_alloc=res.stats.n_alloc,
+        n_free=res.stats.n_free,
+    )
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return {k: _trace(k) for k in {case[0] for case in GOLDEN}}
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN, key=str))
+def test_matches_seed_implementation(case, traces):
+    trace_key, alloc_name, cap_gb = case
+    allocator = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
+    res, _ = replay(traces[trace_key], allocator)
+    assert _digest(res) == GOLDEN[case]
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN, key=str))
+def test_batched_replay_matches_seed(case, traces):
+    """replay_batched is a drop-in: identical digests AND identical marks."""
+    trace_key, alloc_name, cap_gb = case
+    allocator = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
+    res, marks = replay_batched(traces[trace_key], allocator)
+    assert _digest(res) == GOLDEN[case]
+
+    reference = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
+    _, ref_marks = replay(traces[trace_key], reference)
+    assert marks == ref_marks
+
+
+def test_invariants_hold_throughout_golden_traces(traces):
+    """Sampled invariant checks over the training golden trace (both cores)."""
+    for name, cls in _ALLOCATORS.items():
+        allocator = cls(VMMDevice(80 * GB))
+        res, _ = replay(
+            traces["train_opt1.3b_LR"], allocator, check_invariants_every=97
+        )
+        assert not res.oom, name
