@@ -15,6 +15,8 @@ can state its before/after events/sec without re-checking out the seed.
 
 from __future__ import annotations
 
+import gc
+
 from repro.core import (
     GB,
     PAPER_MODELS,
@@ -64,6 +66,10 @@ def bench_rows(fast: bool) -> list:
     for tname, trace in _traces(fast):
         n_events = len(trace.events)
         for aname, cls in ALLOCATORS.items():
+            # drop the previous allocator's cyclic garbage (BFC blocks are a
+            # doubly-linked list) before timing, so one allocator's leftovers
+            # don't surface as GC pauses inside the next one's replay loop
+            gc.collect()
             allocator = cls(VMMDevice(80 * GB))
             res, _marks = replay_batched(trace, allocator)
             us_per_event = res.wall_seconds / n_events * 1e6

@@ -1,0 +1,105 @@
+"""Diff two BENCH_replay.json files and flag µs/event regressions.
+
+CI calls this with the previous successful run's artifact as the baseline and
+the fresh run's output as the candidate:
+
+    python -m benchmarks.compare_replay baseline.json candidate.json \
+        [--threshold 0.20] [--annotate-only]
+
+Exit codes: 0 = no regression (or --annotate-only), 1 = at least one
+trace x allocator pair regressed by more than the threshold, or the
+candidate file itself is unreadable (a defect in this very run, never
+suppressed). A missing or unreadable *baseline* (corrupt artifact, schema
+drift in perf history) warns and exits 0 — an absent perf history must
+never block the build.
+
+Replay numbers are host wall time, so run-to-run noise is real (~±20 % on a
+loaded runner); the default threshold is set at that noise floor, and CI
+runs the *fast* traces where absolute times are small but ratios are stable.
+Rows present on only one side (renamed traces, new allocators) are reported
+but never fail the check. GitHub-flavoured ``::warning``/``::error``
+annotations are emitted for every finding so regressions surface on the PR
+without digging through logs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(payload: dict) -> dict:
+    try:
+        return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+    except (KeyError, TypeError) as e:
+        raise ValueError(f"not a BENCH_replay.json payload: {e}") from e
+
+
+def compare(baseline: dict, candidate: dict, threshold: float):
+    """Returns (regressions, improvements, missing) row-name keyed dicts."""
+    base = _rows(baseline)
+    cand = _rows(candidate)
+    regressions, improvements = {}, {}
+    for name, new_us in cand.items():
+        old_us = base.get(name)
+        if old_us is None or old_us <= 0:
+            continue
+        ratio = new_us / old_us
+        if ratio > 1.0 + threshold:
+            regressions[name] = (old_us, new_us, ratio)
+        elif ratio < 1.0 - threshold:
+            improvements[name] = (old_us, new_us, ratio)
+    missing = sorted(set(base) - set(cand))
+    return regressions, improvements, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="previous run's BENCH_replay.json")
+    ap.add_argument("candidate", help="this run's BENCH_replay.json")
+    ap.add_argument(
+        "--threshold", type=float, default=0.20,
+        help="fractional us/event increase that counts as a regression",
+    )
+    ap.add_argument(
+        "--annotate-only", action="store_true",
+        help="emit annotations but always exit 0 (for noisy runners)",
+    )
+    args = ap.parse_args(argv)
+
+    try:  # a missing/unreadable *baseline* must never block the build
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        _rows(baseline)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::warning::replay perf diff skipped (no usable baseline): {e}")
+        return 0
+    try:  # an unreadable *candidate* is a real defect in this very run
+        with open(args.candidate) as f:
+            candidate = json.load(f)
+        regressions, improvements, missing = compare(
+            baseline, candidate, args.threshold
+        )
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::error::replay perf candidate unreadable: {e}")
+        return 1
+
+    for name, (old, new, ratio) in sorted(improvements.items()):
+        print(f"::notice::replay perf {name}: {old:.1f} -> {new:.1f} us/event "
+              f"({ratio:.2f}x, improvement)")
+    for name in missing:
+        print(f"::warning::replay perf {name}: present in baseline, missing now")
+    for name, (old, new, ratio) in sorted(regressions.items()):
+        level = "warning" if args.annotate_only else "error"
+        print(f"::{level}::replay perf regression {name}: "
+              f"{old:.1f} -> {new:.1f} us/event ({ratio:.2f}x, "
+              f"threshold {1.0 + args.threshold:.2f}x)")
+    if not regressions:
+        print(f"replay perf: {len(candidate.get('rows', []))} rows within "
+              f"{args.threshold:.0%} of baseline")
+    return 1 if regressions and not args.annotate_only else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

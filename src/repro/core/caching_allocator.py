@@ -35,7 +35,11 @@ _ids = itertools.count()
 
 
 class AllocatorOOM(MemoryError):
-    """Raised when an allocator cannot satisfy a request."""
+    """Raised when an allocator cannot satisfy a request (GMLake state S5).
+
+    Carries reserved/active/device-free context in the message so OOM points
+    in replays are attributable; ``ReplayResult.oom_at_event`` pins where.
+    """
 
 
 @dataclass
@@ -66,7 +70,13 @@ class BFCBlock:
 
 @dataclass
 class Allocation:
-    """Handle returned to the user; opaque outside the allocator."""
+    """Handle returned by ``malloc``; opaque outside the allocator.
+
+    ``block`` is a ``BFCBlock`` (caching pool), ``PBlock``/``SBlock``
+    (GMLake), or a plain size (native). ``owner`` routes ``free`` back to
+    the allocator that produced it — GMLake's embedded small pool relies on
+    this to reclaim sub-2 MB requests.
+    """
 
     req_size: int
     block_size: int
@@ -75,7 +85,18 @@ class Allocation:
 
 
 class CachingAllocator:
-    """BFC allocator over a ``VMMDevice``."""
+    """BFC allocator over a ``VMMDevice`` (the paper's baseline, §2.2).
+
+    The fragmentation mechanism under study: best-fit with splitting strands
+    free bytes inside segments that can be neither coalesced (live
+    neighbour) nor released (segment not fully free). GMLake embeds one of
+    these as its sub-2 MB pool (paper §3.1), so the hot-path costs here are
+    also on GMLake's small-request path.
+
+    Free lists are (size, id)-sorted per pool with running free-byte
+    counters and an incremental whole-segment-free table, so ``malloc``/
+    ``free`` are O(log blocks) and ``release_cached`` is O(released).
+    """
 
     name = "caching"
 
@@ -177,6 +198,12 @@ class CachingAllocator:
 
     # -- public API -----------------------------------------------------------
     def malloc(self, size: int) -> Allocation:
+        """Best-fit malloc with splitting (PyTorch CUDACachingAllocator).
+
+        O(log blocks): one bisect over the pool free list, one optional
+        split. On device OOM, releases fully-free cached segments and
+        retries once before raising ``AllocatorOOM``.
+        """
         rsize = self._round_size(size)
         pool = self._pool_for(rsize)
         block = self._find_best_fit(pool, rsize)
@@ -212,6 +239,13 @@ class CachingAllocator:
         return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
 
     def free(self, alloc: Allocation) -> None:
+        """Flip the block free and coalesce with free neighbours.
+
+        No device API calls (the cache keeps the segment) — this is what
+        makes the caching allocator ~10x cheaper than native free, and also
+        what strands capacity (paper Fig. 1). O(log blocks) for the
+        free-list reinserts.
+        """
         block: BFCBlock = alloc.block
         assert block.allocated, "double free"
         block.allocated = False
@@ -252,7 +286,12 @@ class CachingAllocator:
 
 
 class NativeAllocator:
-    """cudaMalloc/cudaFree per request — the paper's native baseline."""
+    """cudaMalloc/cudaFree per request — the paper's native baseline (§2.2).
+
+    Every free synchronizes the device (modeled as ``DEVICE_SYNC_COST``),
+    which is where the ~10x end-to-end overhead against the caching
+    allocator comes from. No pooling, no fragmentation beyond rounding.
+    """
 
     name = "native"
 

@@ -17,6 +17,7 @@ microbenchmarks on hardware that has no CUDA driver.
 
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -79,6 +80,16 @@ def pack_extents(chunk_ids: Iterable[int]) -> List[Extent]:
         else:
             out.append(Extent(cid, 1))
     return out
+
+
+def pack_extent_runs(chunk_runs: Iterable[Iterable[int]]) -> List[Extent]:
+    """``pack_extents`` over a sequence of chunk-id runs without concatenating.
+
+    Runs merge across boundaries exactly as if the ids were one flat list —
+    this is the extent-table builder for stitched blocks, whose chunk ids
+    live in per-member lists.
+    """
+    return pack_extents(itertools.chain.from_iterable(chunk_runs))
 
 
 def unpack_extents(extents: Iterable[Extent]) -> List[int]:

@@ -24,14 +24,45 @@ S4 shortfall we retry BestFit ignoring the fragmentation limit and release
 cached small-pool segments before declaring OOM — chunk-granular stitching
 guarantees every inactive byte is usable, which is the paper's
 "theoretically eliminates all fragmentation" claim (§4.2.1) made operational.
+
+Hot-path data structures (rounds 1 and 2 — see docs/ARCHITECTURE.md):
+
+  * Inactive pools are size-indexed bucket maps partitioned at the
+    fragmentation limit, with running byte totals (round 1). The S3/S4
+    decision reads one counter; the candidate walk only ever sees legal
+    stitch sources.
+  * StitchFree is a lazy-invalidation LRU min-heap of ``(last_use, sid)``
+    entries; stale entries are skipped at pop time (round 1).
+  * Each sBlock keeps a **position map** ``pos: pid -> slot index`` over a
+    slot list, so ``_split``'s member substitution is O(1) per referencing
+    sBlock instead of an O(members) ``list.index`` + tail shift, and the
+    split-away pBlock's key is dropped eagerly instead of lingering until
+    StitchFree destroys the sBlock (round 2).
+  * Activity uses a **per-sBlock activation generation counter**: a held
+    (handed-out) sBlock stamps its members with its current ``gen``;
+    a member is active iff it was handed out directly or its stamp matches
+    its holder's generation. ``free`` of a stitched block is therefore O(1)
+    — it bumps the generation and defers the structural work (pool
+    re-insertion, membership refcounts, byte totals) to a **batched
+    reconcile** that runs before the next pool read (round 2).
+  * S3 hands candidates out **per pool bucket**: the walk slices whole
+    bucket tails (blocks of one size) instead of re-querying and removing
+    per candidate, and aggregates membership refcount deltas in one Counter
+    pass (round 2).
+
+All of this is mechanical sympathy only. Replay behaviour — S1–S5 state
+counts, peak active/reserved bytes, OOM points — is bit-identical to the
+seed implementation; ``tests/test_golden_equivalence.py`` pins it.
 """
 
 from __future__ import annotations
 
 import itertools
 from bisect import bisect_left, insort
+from collections import Counter, deque
 from heapq import heapify, heappop, heappush
-from itertools import chain
+from itertools import chain, repeat
+from operator import attrgetter
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
@@ -42,6 +73,7 @@ from .chunks import (
     DeviceOOM,
     Extent,
     VMMDevice,
+    pack_extent_runs,
     pack_extents,
     round_up,
 )
@@ -51,16 +83,35 @@ _ids = itertools.count()
 
 
 class PBlock:
-    __slots__ = ("pid", "size", "chunks", "active", "sblocks", "va", "_extents")
+    """Primitive block (paper: pBlock): an ordered chunk list + one VA.
+
+    Activity is *computed*, not stored: a pBlock is active iff it was handed
+    out directly (``direct``) or its generation stamp matches its holder
+    sBlock's current generation (``holder``/``holder_gen`` — see the module
+    docstring). Both tests are O(1); nothing iterates members to flip flags.
+    """
+
+    __slots__ = (
+        "pid", "size", "chunks", "direct", "holder", "holder_gen",
+        "sblocks", "va", "_extents",
+    )
 
     def __init__(self, chunks: List[int], va: int = 0):
         self.pid = next(_ids)
         self.chunks = chunks
         self.size = len(chunks) * CHUNK_SIZE
-        self.active = False
-        self.sblocks: set = set()
+        self.direct = False  # handed out on its own (S1/S2/S4 pBlock paths)
+        self.holder: Optional["SBlock"] = None  # last sBlock that held it
+        self.holder_gen = 0  # holder generation stamped at handout
+        self.sblocks: set = set()  # live sBlocks referencing this pBlock
         self.va = va
         self._extents: Optional[List[Extent]] = None
+
+    @property
+    def active(self) -> bool:
+        """O(1): directly handed out, or stamped by a currently-held holder."""
+        h = self.holder
+        return self.direct or (h is not None and self.holder_gen == h.gen)
 
     @property
     def extents(self) -> List[Extent]:
@@ -75,8 +126,38 @@ class PBlock:
 
 
 class SBlock:
+    """Stitched block (paper: sBlock): a VA re-mapping member pBlock chunks.
+
+    Members start as a flat list; the slot structure — a list of slots, one
+    per original member, plus the position map ``pos: pid -> slot index`` —
+    is materialized lazily by the first ``_split`` that substitutes into this
+    sBlock (most sBlocks are never split into, so most never pay for it).
+    Once materialized, a substitution is O(1): ``pos`` names the slot, the
+    halves replace the parent *inside its slot*, and no other slot moves.
+    ``pblocks``/``chunks`` present the flattened view (chunk coverage is
+    identical across splits, so ``chunks`` caches forever).
+
+    ``gen`` is the activation generation: bumped on every handout and every
+    free. Handout stamps each member with the new value; free only bumps the
+    counter, which un-stamps all members at once (O(1) — the structural pool
+    work is deferred to ``GMLakeAllocator._reconcile``). ``active_members``
+    is the *reconciled* count of active members, used by the pool/LRU
+    machinery; ``active`` recomputes the truth from member stamps so it is
+    correct even between a free and the next reconcile.
+
+    While held, the block carries its own **free plan**: ``_plan`` groups
+    members by size for bucket-granular pool re-insertion (for a fresh
+    stitch its lists are the very bucket slices the take pass removed — no
+    per-member rebuilding) and ``_refs`` counts members per referencing
+    sBlock. Both are exact at free time because a held member's size and
+    membership set are frozen: splits and new stitches only touch inactive
+    pBlocks, and StitchFree can only destroy a fully-inactive sBlock, which
+    by the activity-exclusivity argument shares no member with any held one.
+    """
+
     __slots__ = (
-        "sid", "size", "pblocks", "active_members", "va", "last_use",
+        "sid", "size", "slots", "pos", "n_members", "active_members",
+        "gen", "held", "va", "last_use", "_members", "_plan", "_refs",
         "_chunks", "_extents",
     )
 
@@ -87,9 +168,15 @@ class SBlock:
         va: int = 0,
         size: Optional[int] = None,
         active_members: Optional[int] = None,
+        hold: bool = False,
+        refs: Optional[Counter] = None,
+        plan: Optional[Dict[int, list]] = None,
     ):
         self.sid = next(_ids)
-        self.pblocks = list(pblocks)
+        self._members: Optional[List[PBlock]] = pblocks
+        self.slots: Optional[List[List[PBlock]]] = None  # lazy: see _split
+        self.pos: Optional[Dict[int, int]] = None
+        self.n_members = len(pblocks)
         # callers that already know the totals pass them in; both are
         # cross-checked against the members by check_invariants()
         self.size = sum(p.size for p in pblocks) if size is None else size
@@ -98,16 +185,50 @@ class SBlock:
             if active_members is None
             else active_members
         )
+        self.gen = 1 if hold else 0
+        self.held = hold
         self.va = va
         self.last_use = tick
+        self._plan = plan
+        self._refs = refs
         self._chunks: Optional[List[int]] = None
         self._extents: Optional[List[Extent]] = None
-        for p in pblocks:
-            p.sblocks.add(self)
+        if hold:  # handed out at creation (S3/S4): stamp every member
+            for p in pblocks:
+                p.holder = self
+                p.holder_gen = 1
+                p.sblocks.add(self)
+            # the free plan's refcounts: the candidates' memberships as
+            # counted by the take pass, plus this block itself
+            if refs is None:
+                self._refs = refs = Counter()
+            refs[self] = self.n_members
+        else:  # S2 opportunistic stitch: members keep their own activity
+            for p in pblocks:
+                p.sblocks.add(self)
+
+    def members(self) -> List[PBlock]:
+        """Current member list, split halves in place of their parent."""
+        if self.slots is None:
+            return self._members
+        return [p for slot in self.slots for p in slot]
+
+    def materialize_slots(self) -> None:
+        """Build the slot structure + position map on first substitution."""
+        if self.slots is None:
+            self.slots = [[p] for p in self._members]
+            self.pos = {p.pid: j for j, p in enumerate(self._members)}
+            self._members = None
+
+    @property
+    def pblocks(self) -> List[PBlock]:
+        """Flattened member list (compat alias for ``members()``)."""
+        return list(self.members())
 
     @property
     def active(self) -> bool:
-        return self.active_members > 0
+        """True iff any member is active. Exact even before a reconcile."""
+        return self.held or any(p.active for p in self.members())
 
     @property
     def chunks(self) -> List[int]:
@@ -115,7 +236,7 @@ class SBlock:
         # chunk sequence, so the concatenation can be cached forever.
         if self._chunks is None:
             out: List[int] = []
-            for p in self.pblocks:
+            for p in self.members():
                 out.extend(p.chunks)
             self._chunks = out
         return self._chunks
@@ -123,14 +244,17 @@ class SBlock:
     @property
     def extents(self) -> List[Extent]:
         if self._extents is None:
-            self._extents = pack_extents(self.chunks)
+            self._extents = pack_extent_runs(p.chunks for p in self.members())
         return self._extents
 
     def __repr__(self):
         return (
             f"SBlock(id={self.sid}, size={self.size >> 20}MB, "
-            f"n_p={len(self.pblocks)}, active={self.active})"
+            f"n_p={self.n_members}, active={self.active})"
         )
+
+
+_get_sblocks = attrgetter("sblocks")
 
 
 def _key(block) -> int:
@@ -147,12 +271,26 @@ class _IndexedPool:
     Block sizes are chunk multiples, so the number of distinct sizes is small
     compared to the number of blocks; the `_sizes` index only changes when a
     bucket is created or emptied.
+
+    ``add_batch``/``remove_batch`` are the bucket-granular entry points used
+    by the stitched paths: one list merge / one filter per touched bucket
+    instead of a bisect + mid-list shift per member.
+
+    Inserts are **lazily settled**: new entries land in a per-size pending
+    run (one list append) and are merged into the sorted bucket only when an
+    *ordered* query actually reaches that size. Byte/count totals update at
+    insert time, so the O(1) S3-vs-S4 decision never waits on a settle, and
+    sizes the candidate walk never descends to are never sorted at all —
+    which is most of them, since the walk stops at coverage. Settling is
+    timing-transparent: every ordered read sees exactly the bucket an eager
+    insert would have produced.
     """
 
-    __slots__ = ("_buckets", "_sizes", "_count", "bytes")
+    __slots__ = ("_buckets", "_pending", "_sizes", "_count", "bytes")
 
     def __init__(self):
         self._buckets: Dict[int, List[tuple]] = {}  # size -> [(id, block)] asc
+        self._pending: Dict[int, List[tuple]] = {}  # size -> unsorted inserts
         self._sizes: List[int] = []  # ascending distinct sizes
         self._count = 0
         self.bytes = 0  # running sum of member sizes
@@ -162,22 +300,33 @@ class _IndexedPool:
 
     def __iter__(self):
         for size in self._sizes:
-            for _k, b in self._buckets[size]:
-                yield b
+            yield from (b for _k, b in self._settled(size))
+
+    def _settled(self, size: int) -> List[tuple]:
+        """The sorted bucket for ``size``, merging any pending run first."""
+        bucket = self._buckets[size]
+        run = self._pending.pop(size, None)
+        if run is not None:
+            bucket.extend(run)
+            bucket.sort()
+        return bucket
 
     def add(self, block) -> None:
         size = block.size
         bucket = self._buckets.get(size)
         if bucket is None:
-            bucket = self._buckets[size] = []
+            self._buckets[size] = []
             insort(self._sizes, size)
-        insort(bucket, (_key(block), block))
+        run = self._pending.get(size)
+        if run is None:
+            run = self._pending[size] = []
+        run.append((_key(block), block))
         self._count += 1
         self.bytes += size
 
     def remove(self, block) -> None:
         size = block.size
-        bucket = self._buckets[size]
+        bucket = self._settled(size)
         if len(bucket) == 1:
             assert bucket[0][1] is block, "pool corruption"
             del self._buckets[size]
@@ -189,22 +338,55 @@ class _IndexedPool:
         self._count -= 1
         self.bytes -= size
 
+    def add_batch(self, size: int, entries: List[tuple]) -> None:
+        """Queue ``entries`` [(id, block), ...] for one size bucket: one
+        list-extend now, one sort when (if ever) an ordered query reaches
+        this size."""
+        if self._buckets.get(size) is None:
+            self._buckets[size] = []
+            insort(self._sizes, size)
+        run = self._pending.get(size)
+        if run is None:
+            self._pending[size] = list(entries)
+        else:
+            run.extend(entries)
+        self._count += len(entries)
+        self.bytes += size * len(entries)
+
+    def remove_batch(self, size: int, ids: set) -> None:
+        """Remove the entries with the given ids from one size bucket.
+
+        Removing a few ids from a big bucket bisects them out; removing a
+        large share rebuilds the bucket with one filter pass.
+        """
+        bucket = self._settled(size)
+        k = len(ids)
+        if k == len(bucket):  # ids can only name present entries
+            del self._buckets[size]
+            self._sizes.pop(bisect_left(self._sizes, size))
+        elif k <= 16 and k * 8 < len(bucket):
+            for pid in ids:
+                i = bisect_left(bucket, (pid,))
+                assert bucket[i][0] == pid, "pool corruption"
+                bucket.pop(i)
+        else:
+            kept = [e for e in bucket if e[0] not in ids]
+            assert len(kept) == len(bucket) - k, "pool corruption"
+            self._buckets[size] = kept
+        self._count -= k
+        self.bytes -= size * k
+
     def exact(self, size: int):
-        bucket = self._buckets.get(size)
-        return bucket[0][1] if bucket else None
+        if size not in self._buckets:
+            return None
+        return self._settled(size)[0][1]
 
     def best_fit_at_least(self, size: int):
         """Smallest block with block.size >= size."""
         i = bisect_left(self._sizes, size)
         if i < len(self._sizes):
-            return self._buckets[self._sizes[i]][0][1]
+            return self._settled(self._sizes[i])[0][1]
         return None
-
-    def descending(self) -> Iterator:
-        for size in reversed(self._sizes):
-            bucket = self._buckets[size]
-            for i in range(len(bucket) - 1, -1, -1):
-                yield bucket[i][1]
 
 
 class _PartitionedPool:
@@ -252,18 +434,26 @@ class _PartitionedPool:
                 return blk
         return self.main.best_fit_at_least(size)
 
-    def descending(self, include_sub: bool) -> Iterator:
-        if include_sub:
-            return chain(self.main.descending(), self.sub.descending())
-        return self.main.descending()
-
     @property
     def bytes(self) -> int:
         return self.main.bytes + self.sub.bytes
 
 
 class GMLakeAllocator:
-    """The paper's allocator. Drop-in interchangeable with CachingAllocator."""
+    """The paper's allocator. Drop-in interchangeable with CachingAllocator.
+
+    Public surface: ``malloc``/``free`` (paper: Alloc + BestFit / Update),
+    ``reserved_bytes``, ``state_counts`` (S1–S5 tallies of Algorithm 1),
+    ``stats`` (AllocatorStats), ``check_invariants`` (debug/test).
+
+    Deferred-free contract: ``free`` of a stitched block is O(1) — it bumps
+    the sBlock's activation generation and queues the block. The structural
+    pool work is applied by ``_reconcile`` *before any pool read* (entry of
+    ``_malloc_vms``, the over-budget branch of a free, and
+    ``check_invariants``), so every BestFit query observes exactly the state
+    an eager implementation would have. Reconciliation timing is therefore
+    unobservable, which is what keeps replay digests bit-identical.
+    """
 
     name = "gmlake"
 
@@ -301,6 +491,9 @@ class GMLakeAllocator:
         # (last_use, sid) matches the seed's stable sort of the append-only
         # sBlock list: sids are monotone in creation order.
         self._lru_heap: List[Tuple[int, int]] = []
+        # sBlocks freed since the last reconcile: their generation is already
+        # bumped (members read as inactive) but pools/refcounts are stale.
+        self._pending_frees: List[SBlock] = []
         self._sblock_va_bytes = 0
         self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
         self._tick = 0
@@ -313,87 +506,138 @@ class GMLakeAllocator:
     # ------------------------------------------------------------------
     @property
     def reserved_bytes(self) -> int:
+        """Physical bytes held (VMS chunks + small-pool segments). O(1)."""
         return self._chunk_bytes + self._small.reserved_bytes
 
     # ------------------------------------------------------------------
-    # activity propagation
+    # activity transitions
     # ------------------------------------------------------------------
     def _activate_p(self, p: PBlock) -> None:
-        """inactive -> active: leaves the inactive pool, bumps sBlock counts."""
+        """Inactive -> directly active: leave the pool, bump member refcounts.
+
+        Single-block handout (S1 pBlock / S2): O(log bucket + |p.sblocks|).
+        """
         assert not p.active
         self._inactive_p.remove(p)
-        p.active = True
+        p.direct = True
+        inactive_s_remove = self._inactive_s.remove
         for s in p.sblocks:
             if s.active_members == 0:
-                self._inactive_s.remove(s)
+                inactive_s_remove(s)
             s.active_members += 1
 
     def _deactivate_p(self, p: PBlock) -> None:
-        """active -> inactive. Also correct for freshly Alloc'd blocks that
-        were never in the inactive pool (active blocks are never pooled)."""
-        assert p.active
-        p.active = False
+        """Directly active -> inactive. The single-block inverse.
+
+        Correct with frees pending: refcount decrements commute with the
+        deferred ones, and a zero-crossing pushed here or at reconcile
+        carries the same (last_use, sid) either way.
+        """
+        assert p.direct
+        p.direct = False
         self._inactive_p.add(p)
-        for s in p.sblocks:
-            s.active_members -= 1
-            assert s.active_members >= 0
-            if s.active_members == 0:
-                self._inactive_s.add(s)
-                heappush(self._lru_heap, (s.last_use, s.sid))
-
-    # Batch variants of the two flips above for the stitched paths, where one
-    # malloc/free touches every member pBlock (~dozens to hundreds on serving
-    # traces). Semantics are identical; the pool bucket updates are inlined
-    # because per-member function-call overhead dominates the replay hot path.
-    def _activate_many(self, pblocks: List[PBlock]) -> None:
-        limit = self.frag_limit
-        sub, main = self._inactive_p.sub, self._inactive_p.main
-        inactive_s_remove = self._inactive_s.remove
-        for p in pblocks:
-            assert not p.active
-            size = p.size
-            pool = sub if size < limit else main
-            bucket = pool._buckets[size]
-            if len(bucket) == 1:
-                assert bucket[0][1] is p, "pool corruption"
-                del pool._buckets[size]
-                sizes = pool._sizes
-                sizes.pop(bisect_left(sizes, size))
-            else:
-                i = bisect_left(bucket, (p.pid,))
-                assert bucket[i][1] is p, "pool corruption"
-                bucket.pop(i)
-            pool._count -= 1
-            pool.bytes -= size
-            p.active = True
-            for s in p.sblocks:
-                if s.active_members == 0:
-                    inactive_s_remove(s)
-                s.active_members += 1
-
-    def _deactivate_many(self, pblocks: List[PBlock]) -> None:
-        limit = self.frag_limit
-        sub, main = self._inactive_p.sub, self._inactive_p.main
-        inactive_s_add = self._inactive_s.add
         heap = self._lru_heap
-        for p in pblocks:
-            assert p.active
-            p.active = False
-            size = p.size
-            pool = sub if size < limit else main
-            bucket = pool._buckets.get(size)
-            if bucket is None:
-                bucket = pool._buckets[size] = []
-                insort(pool._sizes, size)
-            insort(bucket, (p.pid, p))
-            pool._count += 1
-            pool.bytes += size
-            for s in p.sblocks:
-                m = s.active_members - 1
-                s.active_members = m
-                if m == 0:
-                    inactive_s_add(s)
-                    heappush(heap, (s.last_use, s.sid))
+        inactive_s_add = self._inactive_s.add
+        for s in p.sblocks:
+            m = s.active_members - 1
+            s.active_members = m
+            assert m >= 0
+            if m == 0:
+                inactive_s_add(s)
+                heappush(heap, (s.last_use, s.sid))
+
+    def _hold_sblock(self, s: SBlock) -> None:
+        """Hand out an existing inactive sBlock (S1): one generation bump,
+        one stamp per member, one bucket filter per member size, one
+        aggregated refcount pass. No per-member pool queries. The same walk
+        rebuilds the block's free plan (see ``SBlock``), which stays exact
+        until the matching free because held members are frozen."""
+        s.gen += 1
+        s.held = True
+        gen = s.gen
+        pools = (self._inactive_p.sub, self._inactive_p.main)
+        limit = self.frag_limit
+        plan: Dict[int, list] = {}
+        member_sets = []
+        for p in s.members():
+            p.holder = s
+            p.holder_gen = gen
+            entries = plan.get(p.size)
+            if entries is None:
+                entries = plan[p.size] = []
+            entries.append((p.pid, p))
+            member_sets.append(p.sblocks)
+        for size, entries in plan.items():
+            pools[size >= limit].remove_batch(size, {e[0] for e in entries})
+        refs = Counter(chain.from_iterable(member_sets))
+        self._apply_activation(refs)  # includes s itself: it leaves the pool
+        s._plan = plan
+        s._refs = refs
+
+    def _apply_activation(self, refs: Counter) -> None:
+        """Apply aggregated +delta membership refcounts (activation side).
+
+        Counts only grow within one batch, so an sBlock leaves the inactive
+        pool iff its count was zero before the batch — identical outcome to
+        incrementing one member at a time.
+        """
+        inactive_s_remove = self._inactive_s.remove
+        for s, d in refs.items():
+            if s.active_members == 0:
+                inactive_s_remove(s)
+            s.active_members += d
+
+    def _reconcile(self) -> None:
+        """Apply all deferred sBlock frees in one batched pass.
+
+        Cost: O(touched buckets + distinct referencing sBlocks) across *all*
+        pending frees — the per-member work was already paid once at handout,
+        when the free plan was recorded — vs. one bucket insort and one
+        refcount walk per member in the eager scheme. Pool contents, byte totals,
+        inactive-sBlock set and LRU entries end up exactly as if each free
+        had been applied eagerly at its own tick (counts only shrink here,
+        so zero-crossings are batch-order independent; heap entries are
+        (last_use, sid) values fixed at free time; bucket merges commute
+        with interleaved single-block frees because buckets are id-sorted).
+        """
+        pending = self._pending_frees
+        if not pending:
+            return
+        self._pending_frees = []
+        pools = (self._inactive_p.sub, self._inactive_p.main)
+        limit = self.frag_limit
+        if len(pending) == 1:  # common case: no cross-free merging needed
+            s = pending[0]
+            by_size, refs = s._plan, s._refs
+            s._plan = s._refs = None
+        else:
+            by_size = {}
+            refs = Counter()
+            for s in pending:
+                for size, entries in s._plan.items():
+                    batch = by_size.get(size)
+                    if batch is None:
+                        by_size[size] = entries  # plans are single-use: own it
+                    else:
+                        batch.extend(entries)
+                refs.update(s._refs)
+                s._plan = s._refs = None
+        for size, entries in by_size.items():
+            pools[size >= limit].add_batch(size, entries)
+        heap = self._lru_heap
+        inactive_s_add = self._inactive_s.add
+        for s, d in refs.items():
+            m = s.active_members - d
+            s.active_members = m
+            assert m >= 0
+            if m == 0:
+                inactive_s_add(s)
+                heappush(heap, (s.last_use, s.sid))
+        # lazy invalidation leaves stale entries behind; when they outnumber
+        # the live ones, rebuild from the inactive set (one valid entry per
+        # inactive sBlock) so heap memory stays O(inactive), not O(frees)
+        if len(heap) > 64 + 4 * len(self._inactive_s):
+            self._compact_lru_heap()
 
     # ------------------------------------------------------------------
     # primitive operations: Alloc / Split / Stitch / StitchFree
@@ -404,15 +648,19 @@ class GMLakeAllocator:
         p = PBlock(chunks)
         self._pblocks[p.pid] = p
         self._chunk_bytes += p.size
-        p.active = True  # handed out or immediately stitched by the caller
+        p.direct = True  # handed out or immediately stitched by the caller
         return p
 
     def _split(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
         """Paper's Split: divide an *inactive* pBlock; re-map both halves.
 
-        sBlocks referencing the old pBlock substitute the two halves in
-        place (chunk coverage identical) — the paper's "new pBlocks replace
-        the predecessor" without invalidating the stitched pattern tape.
+        sBlocks referencing the old pBlock substitute the two halves inside
+        its slot (chunk coverage identical) — the paper's "new pBlocks
+        replace the predecessor" without invalidating the stitched pattern
+        tape. The position map (materialized on the first substitution into
+        each sBlock) makes this O(1): ``pos`` names the slot, no other slot
+        moves, and the dead pBlock's key is dropped from every referencing
+        map right here.
         """
         assert not p.active and 0 < first_size < p.size
         assert first_size % CHUNK_SIZE == 0
@@ -427,8 +675,14 @@ class GMLakeAllocator:
         self.device.vmm_map_existing(len(a.chunks))
         self.device.vmm_map_existing(len(b.chunks))
         for s in p.sblocks:
-            i = s.pblocks.index(p)
-            s.pblocks[i : i + 1] = [a, b]
+            s.materialize_slots()
+            j = s.pos.pop(p.pid)
+            slot = s.slots[j]
+            i = slot.index(p)  # slots start singleton and stay tiny
+            slot[i : i + 1] = [a, b]
+            s.pos[a.pid] = j
+            s.pos[b.pid] = j
+            s.n_members += 1
             a.sblocks.add(s)
             b.sblocks.add(s)
         p.sblocks.clear()
@@ -441,14 +695,25 @@ class GMLakeAllocator:
         pblocks: List[PBlock],
         total_size: Optional[int] = None,
         active_members: Optional[int] = None,
+        hold: bool = False,
+        refs: Optional[Counter] = None,
+        plan: Optional[Dict[int, list]] = None,
     ) -> SBlock:
-        """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create."""
+        """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create.
+
+        ``hold=True`` marks the new sBlock as the handed-out allocation:
+        every member is stamped with its generation and the take pass's
+        ``refs`` Counter + bucket slices are cached as the free plan
+        (S3/S4). ``hold=False`` is the S2 opportunistic stitch, whose
+        members keep their own state.
+        """
         if total_size is None:
             total_size = sum(p.size for p in pblocks)
         n = total_size // CHUNK_SIZE  # == total member chunk count
         self.device.vmm_map_existing(n)
         s = SBlock(
-            pblocks, tick=self._tick, size=total_size, active_members=active_members
+            pblocks, tick=self._tick, size=total_size,
+            active_members=active_members, hold=hold, refs=refs, plan=plan,
         )
         self._sblocks[s.sid] = s
         self._sblock_va_bytes += s.size
@@ -459,7 +724,11 @@ class GMLakeAllocator:
         return s
 
     def _maybe_stitch_free(self) -> None:
-        """Paper's StitchFree: LRU-evict inactive sBlocks past the VA budget."""
+        """Paper's StitchFree: LRU-evict inactive sBlocks past the VA budget.
+
+        O(evicted * (log heap + members)); callers guarantee pending frees
+        are reconciled before eviction runs (so ``active_members`` is exact).
+        """
         if self._sblock_va_bytes <= self.sblock_va_budget:
             return
         heap = self._lru_heap
@@ -472,73 +741,204 @@ class GMLakeAllocator:
             self._destroy_sblock(s)
 
     def _destroy_sblock(self, s: SBlock) -> None:
+        """Unmap and forget an sBlock; eagerly drop every back-reference.
+
+        Only fully-inactive sBlocks are ever destroyed, and an inactive
+        sBlock cannot share a member with a *held* one (the shared member
+        would make it active) — so no held block's cached free plan can
+        reference this block, and the membership drop is a pure discard
+        sweep, run as one C-level map. Stale ``holder`` pointers at this
+        block are left in place: the generation test reads them as inactive
+        forever (the block's gen was bumped at its final free), and each
+        pBlock retains at most one dead holder, so the object graph stays
+        bounded.
+        """
         if s.active_members == 0:
             self._inactive_s.remove(s)
         del self._sblocks[s.sid]
         self._sblock_va_bytes -= s.size
-        for p in s.pblocks:
-            p.sblocks.discard(s)
-        self.device.cu_mem_unmap(len(s.pblocks))
+        members = s.members()
+        deque(map(set.discard, [p.sblocks for p in members], repeat(s)), maxlen=0)
+        self.device.cu_mem_unmap(s.n_members)
         self.device.cu_mem_address_free()
+
+    def _compact_lru_heap(self) -> None:
+        heap = [(s.last_use, s.sid) for s in self._inactive_s]
+        heapify(heap)
+        self._lru_heap = heap
 
     # ------------------------------------------------------------------
     # BestFit — Algorithm 1
     # ------------------------------------------------------------------
     def _best_fit(self, bsize: int, ignore_frag_limit: bool = False):
-        """Returns (state, candidate blocks, candidate bytes). States 1..4."""
+        """Classify the request: returns (state, block, available bytes).
+
+        States 1..4 per Algorithm 1. ``block`` is the S1/S2 hit (None for
+        S3/S4 — candidates are taken lazily by ``_take_stitch_candidates``
+        so the walk and the handout are one pass). The S3-vs-S4 decision
+        reads one running byte counter; no block is touched.
+        """
         # S1: exact match over inactive sBlocks U pBlocks (the only state in
         # which an sBlock may be assigned).
         blk = self._inactive_p.exact(bsize)
         if blk is None:
             blk = self._inactive_s.exact(bsize)
         if blk is not None:
-            return 1, [blk], bsize
+            return 1, blk, bsize
 
         # S2: single best-fit pBlock >= bsize.
         single = self._inactive_p.best_fit_at_least(bsize)
         if single is not None:
-            return 2, [single], single.size
+            return 2, single, single.size
 
-        # S3/S4: accumulate largest-first until the sum covers the request.
-        # Blocks below the frag limit are not stitch sources (paper §4.2.3),
-        # which the partitioned pool encodes structurally: the scan only sees
-        # legal candidates, and the running byte totals decide S3-vs-S4
-        # before touching a single block.
-        if ignore_frag_limit:
-            pool_bytes = self._inactive_p.bytes
-            candidates = self._inactive_p.descending(include_sub=True)
-            if pool_bytes < bsize:  # S4: even the whole pool cannot cover it
-                return 4, list(candidates), pool_bytes
-            cb: List[PBlock] = []
-            cb_size = 0
-            for p in candidates:
-                cb.append(p)
-                cb_size += p.size
-                if cb_size >= bsize:
-                    return 3, cb, cb_size
-            raise AssertionError("pool byte counter out of sync with contents")
+        # S3/S4: decided by the running byte totals alone. Blocks below the
+        # frag limit are not stitch sources (paper §4.2.3), which the
+        # partitioned pool encodes structurally.
+        avail = (
+            self._inactive_p.bytes if ignore_frag_limit else self._inactive_p.main.bytes
+        )
+        return (3 if avail >= bsize else 4), None, avail
 
+    def _take_stitch_candidates(
+        self, bsize: int, include_sub: bool
+    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
+        """Remove and return the S3 candidate set, largest blocks first.
+
+        Walks pool buckets largest-size-first. A bucket consumed whole never
+        needs sorting at all (blocks of one size are interchangeable for
+        everything the digests pin — only the intra-stitch chunk layout
+        differs, which nothing downstream reads); the completing bucket
+        selects its k highest ids with one ``nlargest`` pass and leaves the
+        remainder as an unsorted pending run. Candidate *selection* — the
+        chosen id set and the identity of the block that gets split — is
+        exactly the id-ordered scheme's. Membership refcount deltas are
+        aggregated into one Counter pass. The Counter and the removed
+        bucket slices double as the eventual free plan (returned so
+        ``_stitch`` can cache them on the new sBlock — the pool
+        re-insertion at free reuses these very lists). The completing block
+        is split first when it would overshoot (and is at/above the frag
+        limit), exactly as the per-candidate scheme did.
+        """
         main = self._inactive_p.main
-        if main.bytes < bsize:  # S4: even the whole stitchable pool falls short
-            return 4, list(main.descending()), main.bytes
-        # S3 guaranteed: walk buckets largest-first inline (no generator frames)
-        cb = []
-        append = cb.append
-        cb_size = 0
-        buckets = main._buckets
-        for size in reversed(main._sizes):
-            bucket = buckets[size]
-            for i in range(len(bucket) - 1, -1, -1):
-                append(bucket[i][1])
-                cb_size += size
-                if cb_size >= bsize:
-                    return 3, cb, cb_size
-        raise AssertionError("pool byte counter out of sync with contents")
+        pools = (main, self._inactive_p.sub) if include_sub else (main,)
+        cb: List[PBlock] = []
+        segments: List[list] = []  # taken bucket slices, walk order
+        plan: Dict[int, list] = {}
+        total = 0
+        split_last: Optional[PBlock] = None
+        keep = 0
+        done = False
+        for pool in pools:
+            sizes = pool._sizes
+            buckets = pool._buckets
+            pending = pool._pending
+            for si in range(len(sizes) - 1, -1, -1):
+                size = sizes[si]
+                bucket = buckets[size]
+                run = pending.pop(size, None)
+                n = len(bucket) + (len(run) if run is not None else 0)
+                k = -(-(bsize - total) // size)  # blocks of `size` still needed
+                if k > n:  # take the whole bucket: no order needed
+                    if run is not None:
+                        bucket.extend(run)
+                    del buckets[size]
+                    sizes.pop(si)
+                    plan[size] = bucket  # the take owns the slice: reuse it
+                    segments.append(bucket)
+                    pool._count -= n
+                    pool.bytes -= size * n
+                    total += size * n
+                    continue
+                # This bucket completes the request: its k highest ids win.
+                # The winners can only be the sorted base's last k entries or
+                # pending inserts, so selection is O(k + |run|) — the bucket
+                # body is never scanned or sorted.
+                cand = bucket[-k:] + run if run is not None else bucket[-k:]
+                del bucket[-k:]
+                if run is not None:
+                    cand.sort()
+                top = cand[-k:]  # ascending; top[0] is the lowest winner
+                rest = cand[:-k]  # candidate-window losers: back to pending
+                overshoot = total + size * k - bsize
+                if overshoot and size >= self.frag_limit:
+                    # the completing block — the lowest winner — is split to
+                    # fit. It stays pooled: _split removes it and re-adds
+                    # the halves itself.
+                    split_last = top[0][1]
+                    rest.append(top[0])
+                    taken = top[1:]
+                    k -= 1
+                    keep = size - overshoot
+                    total = bsize - keep
+                else:
+                    taken = top
+                    total += size * k
+                if rest:
+                    pending[size] = rest  # unsorted; settled on next query
+                elif not bucket:
+                    del buckets[size]
+                    sizes.pop(si)
+                if k:
+                    plan[size] = taken
+                    segments.append(taken)
+                pool._count -= k
+                pool.bytes -= size * k
+                done = True
+                break
+            if done:
+                break
+        else:
+            raise AssertionError("pool byte counter out of sync with contents")
+        for seg in segments:
+            cb += [e[1] for e in seg]
+        if split_last is not None:
+            a, _b = self._split(split_last, keep)
+            self._inactive_p.remove(a)
+            cb.append(a)
+            entries = plan.get(a.size)
+            if entries is None:
+                plan[a.size] = [(a.pid, a)]
+            else:
+                entries.append((a.pid, a))
+            total += keep
+        refs = Counter(chain.from_iterable(map(_get_sblocks, cb)))
+        self._apply_activation(refs)
+        return cb, total, refs, plan
+
+    def _take_all(
+        self, include_sub: bool
+    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
+        """Drain the stitchable pool(s) for S4, largest blocks first."""
+        main = self._inactive_p.main
+        pools = (main, self._inactive_p.sub) if include_sub else (main,)
+        cb: List[PBlock] = []
+        plan: Dict[int, list] = {}
+        total = 0
+        for pool in pools:
+            for size in reversed(pool._sizes):
+                bucket = pool._settled(size)
+                cb += [e[1] for e in reversed(bucket)]
+                total += size * len(bucket)
+                plan[size] = bucket  # main/sub sizes are disjoint partitions
+            pool._buckets = {}
+            pool._pending.clear()
+            pool._sizes.clear()
+            pool._count = 0
+            pool.bytes = 0
+        refs = Counter(chain.from_iterable(map(_get_sblocks, cb)))
+        self._apply_activation(refs)
+        return cb, total, refs, plan
 
     # ------------------------------------------------------------------
     # allocation strategy (paper Fig. 9)
     # ------------------------------------------------------------------
     def malloc(self, size: int) -> Allocation:
+        """Allocate ``size`` bytes (paper Fig. 9 / Algorithm 1).
+
+        Requests under 2 MB go to the embedded splitting pool; everything
+        else is chunk-rounded and served by BestFit. Raises ``AllocatorOOM``
+        (state S5) only when the device truly cannot cover the request.
+        """
         if size < SMALL_ALLOC_LIMIT:
             alloc = self._small.malloc(size)
             alloc.owner = self
@@ -546,6 +946,8 @@ class GMLakeAllocator:
             return alloc
 
         self._tick += 1
+        if self._pending_frees:
+            self._reconcile()
         bsize = round_up(size, CHUNK_SIZE)
         try:
             block = self._malloc_vms(bsize)
@@ -561,30 +963,32 @@ class GMLakeAllocator:
         return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
 
     def _malloc_vms(self, bsize: int):
-        state, cb, cb_size = self._best_fit(bsize)
+        state, blk, avail = self._best_fit(bsize)
+        include_sub = False
         if state == 4:
             # If a fresh Alloc would not fit, first retry using every inactive
             # byte (ignore the frag limit), then drop cached small segments.
-            need = bsize - cb_size
-            if need > self.device.free_bytes:
-                state, cb, cb_size = self._best_fit(bsize, ignore_frag_limit=True)
+            if bsize - avail > self.device.free_bytes:
+                state, blk, avail = self._best_fit(bsize, ignore_frag_limit=True)
+                include_sub = True
                 if state == 4:
-                    need = bsize - cb_size
                     # O(1) early-out: nothing cached means nothing to release
-                    if need > self.device.free_bytes and self._small.cached_free_bytes():
+                    if (
+                        bsize - avail > self.device.free_bytes
+                        and self._small.cached_free_bytes()
+                    ):
                         self._small.release_cached()
         self.state_counts[f"S{state}"] += 1
 
         if state == 1:
-            blk = cb[0]
             if isinstance(blk, PBlock):
                 self._activate_p(blk)
             else:
-                self._activate_many(blk.pblocks)
+                self._hold_sblock(blk)
             return blk
 
         if state == 2:
-            p = cb[0]
+            p = blk
             # paper §4.2.3: blocks below the frag limit are not split
             if p.size == bsize or p.size < self.frag_limit:
                 self._activate_p(p)
@@ -597,66 +1001,84 @@ class GMLakeAllocator:
             return a
 
         if state == 3:
-            total = cb_size
-            if total > bsize:
-                last = cb[-1]
-                keep = last.size - (total - bsize)
-                if keep > 0 and last.size >= self.frag_limit:
-                    a, _b = self._split(last, keep)
-                    cb[-1] = a
+            cb, total, refs, plan = self._take_stitch_candidates(bsize, include_sub)
             if len(cb) == 1:  # degenerate after split: a plain pBlock handout
-                self._activate_p(cb[0])
+                cb[0].direct = True
                 return cb[0]
-            self._activate_many(cb)  # every candidate is active at stitch time
             return self._stitch(
-                cb, total_size=sum(p.size for p in cb), active_members=len(cb)
+                cb, total_size=total, active_members=len(cb),
+                hold=True, refs=refs, plan=plan,
             )
 
         # state == 4: insufficient inactive blocks -> Alloc new physical memory
-        need = bsize - cb_size
-        new_p = self._alloc_new(need)  # raises DeviceOOM -> S5 upstream
-        if not cb:
+        new_p = self._alloc_new(bsize - avail)  # raises DeviceOOM -> S5 upstream
+        if avail == 0:
             return new_p
-        self._activate_many(cb)  # cb + the fresh Alloc are all active
+        cb, total, refs, plan = self._take_all(include_sub)
+        assert total == avail, "pool byte counter out of sync with contents"
+        new_p.direct = False  # joins the stitch as a generation-stamped member
+        entries = plan.get(new_p.size)
+        if entries is None:
+            plan[new_p.size] = [(new_p.pid, new_p)]
+        else:
+            entries.append((new_p.pid, new_p))
         return self._stitch(
             cb + [new_p],
-            total_size=cb_size + new_p.size,
+            total_size=total + new_p.size,
             active_members=len(cb) + 1,
+            hold=True,
+            refs=refs,
+            plan=plan,
         )
 
     # ------------------------------------------------------------------
     # deallocation: Update (no physical free)
     # ------------------------------------------------------------------
     def free(self, alloc: Allocation) -> None:
+        """Paper's Update: flip state only, keep physical memory.
+
+        pBlock frees apply eagerly (one block). sBlock frees are O(1): bump
+        the activation generation — all member stamps go stale at once — and
+        queue the block for the next batched reconcile. StitchFree still
+        runs here when the VA budget is exceeded (reconciling first, so the
+        eviction scan sees exact refcounts).
+        """
         block = alloc.block
         if isinstance(block, PBlock):
             self._deactivate_p(block)
+            if len(self._lru_heap) > 64 + 4 * len(self._inactive_s):
+                self._compact_lru_heap()
         elif isinstance(block, SBlock):
-            # refresh last_use first so the LRU entry pushed when the block
-            # flips inactive below already carries the post-free tick
+            assert block.held, "double free of stitched block"
+            # refresh last_use first so the LRU entry pushed at reconcile
+            # already carries the post-free tick
             block.last_use = self._tick
-            self._deactivate_many(block.pblocks)
-            self._maybe_stitch_free()  # budget may be enforceable only now
+            block.gen += 1
+            block.held = False
+            self._pending_frees.append(block)
+            if self._sblock_va_bytes > self.sblock_va_budget:
+                self._reconcile()  # budget may be enforceable only now
+                self._maybe_stitch_free()
         else:  # small-pool block
             self._small.free(alloc)
             self.stats.on_free(alloc.block_size, self.reserved_bytes)
             return
         self.stats.on_free(alloc.block_size, self.reserved_bytes)
-        # lazy invalidation leaves stale entries behind; when they outnumber
-        # the live ones, rebuild from the inactive set (one valid entry per
-        # inactive sBlock) so heap memory stays O(inactive), not O(frees)
-        if len(self._lru_heap) > 64 + 4 * len(self._inactive_s):
-            self._compact_lru_heap()
-
-    def _compact_lru_heap(self) -> None:
-        heap = [(s.last_use, s.sid) for s in self._inactive_s]
-        heapify(heap)
-        self._lru_heap = heap
 
     # ------------------------------------------------------------------
     # debug / test support
     # ------------------------------------------------------------------
     def check_invariants(self) -> None:
+        """Validate every structural invariant (test/debug only; O(blocks)).
+
+        Reconciles pending frees first — reconciliation timing is
+        unobservable to callers, so this never perturbs replay behaviour.
+        The invariants below are the ones the golden-digest tests pin:
+        pools hold exactly the inactive blocks, refcounts and byte totals
+        match ground truth recomputed from members, position maps agree
+        with slot contents, and every inactive sBlock is LRU-reachable.
+        """
+        self._reconcile()
         seen_chunks: Dict[int, int] = {}
         inactive_ids = {p.pid for p in self._inactive_p}
         for p in self._pblocks.values():
@@ -668,12 +1090,23 @@ class GMLakeAllocator:
         inactive_s_ids = {s.sid for s in self._inactive_s}
         lru_entries = set(self._lru_heap)
         for s in self._sblocks.values():
-            assert s.size == sum(p.size for p in s.pblocks)
-            assert s.active_members == sum(1 for p in s.pblocks if p.active)
+            members = s.members()
+            assert s.size == sum(p.size for p in members)
+            assert s.n_members == len(members)
+            if s.slots is not None:  # materialized by a split substitution
+                assert s.pos == {
+                    p.pid: j for j, slot in enumerate(s.slots) for p in slot
+                }
+            assert s.active_members == sum(1 for p in members if p.active)
+            assert s.active == (s.active_members > 0)
+            if s.held:  # held: every member stamped with the current gen
+                assert all(
+                    p.holder is s and p.holder_gen == s.gen for p in members
+                )
             assert (s.sid in inactive_s_ids) == (not s.active)
             if not s.active:  # every inactive sBlock is reachable by StitchFree
                 assert (s.last_use, s.sid) in lru_entries
-            for p in s.pblocks:
+            for p in members:
                 assert s in p.sblocks
                 assert p.pid in self._pblocks
         assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes

@@ -54,6 +54,13 @@ _OP_CODES = {ALLOC: _OP_ALLOC, FREE: _OP_FREE, MARK: _OP_MARK}
 
 @dataclass(frozen=True)
 class TraceEvent:
+    """One allocator-visible event: alloc(tid, size) / free(tid) / mark.
+
+    ``mark`` events carry phase labels (iteration boundaries, "end") and are
+    where replay snapshots the S1-S5 state counters for convergence plots
+    (paper Fig. 14).
+    """
+
     op: str
     tid: int
     size: int = 0
@@ -62,6 +69,15 @@ class TraceEvent:
 
 @dataclass
 class Trace:
+    """An ordered allocator event stream plus provenance metadata.
+
+    Traces are the unit of evaluation: synthesised from model configs
+    (``training_trace``/``inference_trace``) or recorded from the real
+    framework components, then replayed through any allocator over the
+    device model. ``compiled()`` caches the flat-array form the batched
+    replay loop consumes.
+    """
+
     events: List[TraceEvent] = field(default_factory=list)
     meta: Dict[str, object] = field(default_factory=dict)
 
@@ -448,6 +464,12 @@ def replay(
     allocator methods are pre-bound, the OOM try/except wraps whole loop runs
     instead of single events, and the invariant-sampling branch lives in a
     separate loop variant so the common case pays nothing for it.
+
+    ``check_invariants_every=n`` calls ``allocator.check_invariants()`` every
+    n events. For GMLake this also forces a reconcile of deferred sBlock
+    frees — which is timing-transparent by design, a property the golden
+    tests pin by replaying at several cadences (see
+    ``tests/test_golden_equivalence.py::test_reconcile_timing_is_unobservable``).
     """
     live: Dict[int, object] = {}
     oom = False

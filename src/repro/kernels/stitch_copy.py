@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..utils.compat import MEMORY_SPACE_ANY
+
 # Lane-friendly chunk layout: (sublane, lane) = (8k, 128) tiles. One arena
 # chunk is a row of ``chunk_elems`` elements, viewed 2-D for VMEM tiling.
 LANE = 128
@@ -84,7 +86,7 @@ def stitch_scatter(
             pl.BlockSpec((1, chunk_elems), lambda i, cmap: (i, 0)),
             # the arena input is only aliased, never read by the kernel:
             # keep it out of the VMEM pipeline entirely
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=MEMORY_SPACE_ANY),
         ],
         out_specs=pl.BlockSpec((1, chunk_elems), lambda i, cmap: (cmap[i], 0)),
     )

@@ -3,8 +3,12 @@
 Import ``shard_map`` from here instead of from jax directly: jax >= 0.4.35
 exports it at top level with a ``check_vma`` kwarg, while older releases
 have it under ``jax.experimental`` with the kwarg named ``check_rep``.
-Future shims for drifting APIs (e.g. Pallas ``pltpu.MemorySpace``) belong
-in this module too — see ROADMAP.md Open items.
+
+Import ``TPUMemorySpace`` (or the ready-made ``MEMORY_SPACE_ANY``) from
+here instead of from ``jax.experimental.pallas.tpu``: newer Pallas renamed
+the enum from ``TPUMemorySpace`` to ``MemorySpace``, and kernels written
+against either name break on the other. The shim resolves whichever the
+installed jax provides.
 """
 
 from __future__ import annotations
@@ -17,4 +21,19 @@ except ImportError:  # older jax: experimental namespace + check_rep kwarg
     def shard_map(f, /, *, check_vma=True, **kwargs):
         return _shard_map_exp(f, check_rep=check_vma, **kwargs)
 
-__all__ = ["shard_map"]
+
+try:  # newer Pallas: pltpu.MemorySpace
+    from jax.experimental.pallas.tpu import MemorySpace as TPUMemorySpace
+except ImportError:
+    try:  # older Pallas: pltpu.TPUMemorySpace
+        from jax.experimental.pallas.tpu import TPUMemorySpace
+    except ImportError:  # no usable Pallas TPU module: kernels unavailable,
+        TPUMemorySpace = None  # but shard_map-only consumers still import
+
+#: The "leave it wherever it lives" memory space used for aliased operands
+#: that the kernel body never reads through the VMEM pipeline. None when the
+#: installed jax has no Pallas TPU module (the kernels themselves fail at
+#: their own ``pallas`` imports in that case; this module must not).
+MEMORY_SPACE_ANY = TPUMemorySpace.ANY if TPUMemorySpace is not None else None
+
+__all__ = ["shard_map", "TPUMemorySpace", "MEMORY_SPACE_ANY"]

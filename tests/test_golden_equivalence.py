@@ -140,3 +140,31 @@ def test_invariants_hold_throughout_golden_traces(traces):
             traces["train_opt1.3b_LR"], allocator, check_invariants_every=97
         )
         assert not res.oom, name
+
+
+@pytest.mark.parametrize(
+    "trace_key,cadence",
+    [
+        ("train_opt1.3b_LR", 1),
+        ("train_opt1.3b_LR", 7),
+        ("train_opt1.3b_LR", 97),
+        # the serving trace is the S3-dominant stress case for the deferred
+        # path: ~93% of requests free a held stitched block, so pending
+        # frees and StitchFree interleave densely with the forced reconciles
+        ("serve_vicuna", 3),
+        ("serve_vicuna", 101),
+    ],
+)
+def test_reconcile_timing_is_unobservable(trace_key, cadence, traces):
+    """Deferred-free reconciliation must not be a behaviour knob.
+
+    ``check_invariants`` reconciles pending sBlock frees, so replaying with
+    invariant checks at different cadences forces reconciliation at
+    arbitrary points mid-trace. Digests must match the unchecked replay
+    exactly — if they ever diverge, the deferred free path leaked timing
+    into allocation policy.
+    """
+    trace = traces[trace_key]
+    allocator = GMLakeAllocator(VMMDevice(80 * GB))
+    res, _ = replay(trace, allocator, check_invariants_every=cadence)
+    assert _digest(res) == GOLDEN[(trace_key, "gmlake", 80)]
