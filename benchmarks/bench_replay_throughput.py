@@ -1,22 +1,36 @@
-"""Replay-throughput benchmark: host-side allocator events/sec.
+"""Replay-throughput benchmark: host-side allocator events/sec, per backend.
 
 GMLake's pitch is that VMS defragmentation is cheap enough to sit on the
 allocation hot path (paper §4.3); this benchmark makes that a first-class,
-regression-tracked number. For each (trace x allocator) pair it replays the
-event stream through ``replay_batched`` and reports host µs/event
-(``us_per_call``) and events/sec (``derived``). Device-API cost is modeled
-elsewhere (alloc_latency); everything here is real measured wall time of the
-allocator data structures plus the replay loop.
+regression-tracked number. For each (trace x registered backend) pair it
+replays the event stream through ``replay_batched`` and reports host
+µs/event (``us_per_call``) and events/sec (``derived``). The backend list
+comes from ``repro.alloc.registry``, so a newly registered allocator shows
+up here (and in CI's smoke run) with zero benchmark changes — and a broken
+registration fails loudly.
+
+Each JSON row also carries the **modeled** device-API cost from the
+``VMMCostLedger`` (``model_cost`` total + ``model_cost_per_event``, in
+cuMalloc units). Unlike host wall time, the modeled number is a pure
+function of the allocator's decisions — bit-stable across runs and
+machines — so ``compare_replay.py`` gates on it first and treats wall time
+as the noisy secondary signal.
+
+Planning backends (``capabilities.planning``) are prepared once per trace
+*outside* the timed loop, mirroring their offline-profiling deployment;
+the plan-pass seconds are reported in the row's ``extra``.
 
 Also emits machine-readable ``BENCH_replay.json`` (see BENCHMARKS.md) with
-the rows plus the recorded seed-implementation baseline, so every future PR
-can state its before/after events/sec without re-checking out the seed.
+the rows plus the recorded seed-implementation baseline, so every future
+PR can state its before/after events/sec without re-checking out the seed.
 """
 
 from __future__ import annotations
 
 import gc
+from typing import List, Optional, Sequence
 
+from repro.alloc import registry
 from repro.core import (
     GB,
     PAPER_MODELS,
@@ -25,16 +39,8 @@ from repro.core import (
     replay_batched,
     training_trace,
 )
-from repro.core.caching_allocator import CachingAllocator, NativeAllocator
-from repro.core.gmlake import GMLakeAllocator
 
 from .common import Row, emit, emit_json
-
-ALLOCATORS = {
-    "native": NativeAllocator,
-    "caching": CachingAllocator,
-    "gmlake": GMLakeAllocator,
-}
 
 #: Seed-implementation µs/event measured on the pre-rewrite allocator core
 #: (sort-on-StitchFree, O(n) sBlock removal, unpartitioned inactive pool,
@@ -61,36 +67,62 @@ def _traces(fast: bool):
     return [("train_opt13b_LRO", train), (serve_name, serve)]
 
 
-def bench_rows(fast: bool) -> list:
+def bench_rows(fast: bool, allocators: Optional[Sequence[str]] = None) -> List[Row]:
+    names = list(allocators) if allocators else registry.names()
     rows = []
     for tname, trace in _traces(fast):
         n_events = len(trace.events)
-        for aname, cls in ALLOCATORS.items():
+        for aname in names:
             # drop the previous allocator's cyclic garbage (BFC blocks are a
             # doubly-linked list) before timing, so one allocator's leftovers
             # don't surface as GC pauses inside the next one's replay loop
             gc.collect()
-            allocator = cls(VMMDevice(80 * GB))
+            allocator = registry.create(aname, VMMDevice(80 * GB))
+            extra = ""
+            if getattr(allocator, "needs_prepare", False):
+                plan = allocator.prepare(trace)  # off the timed path
+                extra = f"plan:{plan.plan_seconds * 1e3:.0f}ms"
             res, _marks = replay_batched(trace, allocator)
             us_per_event = res.wall_seconds / n_events * 1e6
             events_per_sec = n_events / res.wall_seconds
             name = f"{tname}/{aname}"
             seed_us = SEED_US_PER_EVENT.get(name)
-            extra = f"seed:{seed_us:.1f}us x{seed_us / us_per_event:.2f}" if seed_us else ""
-            rows.append(Row(name, us_per_event, events_per_sec, extra))
+            if seed_us:
+                extra = (extra + " " if extra else "") + (
+                    f"seed:{seed_us:.1f}us x{seed_us / us_per_event:.2f}"
+                )
+            rows.append(
+                Row(
+                    name,
+                    us_per_event,
+                    events_per_sec,
+                    extra,
+                    metrics={
+                        "model_cost": res.model_cost,
+                        "model_cost_per_event": res.model_cost / n_events,
+                        "peak_reserved": res.stats.peak_reserved,
+                        "oom": res.oom,
+                    },
+                )
+            )
     return rows
 
 
-def run(fast: bool = False) -> None:
-    rows = bench_rows(fast)
+def run(fast: bool = False, allocators: Optional[Sequence[str]] = None) -> None:
+    rows = bench_rows(fast, allocators)
     emit(rows, "replay throughput: host us/event, events/sec (derived)")
     emit_json(
         "replay",
         {
             "benchmark": "replay_throughput",
             "fast": fast,
-            "unit": {"us_per_call": "host microseconds per event",
-                     "derived": "events per second"},
+            "allocators": list(allocators) if allocators else registry.names(),
+            "unit": {
+                "us_per_call": "host microseconds per event",
+                "derived": "events per second",
+                "model_cost": "modeled device-API cost, cuMalloc units "
+                "(load-independent; primary regression-gate signal)",
+            },
             "rows": [r.as_dict() for r in rows],
             "seed_us_per_event": SEED_US_PER_EVENT,
         },

@@ -8,6 +8,8 @@ interpret mode by the test suite).
 
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
 import jax.numpy as jnp
 
@@ -17,12 +19,13 @@ from repro.kernels import ops
 from .common import Row, emit, timed
 
 
-def kv_churn() -> list:
+def kv_churn(allocators: Optional[Sequence[str]] = None) -> list:
+    allocs = tuple(allocators) if allocators else ("caching", "gmlake")
     rows = []
     for mname in ("opt-13b", "gpt-neox-20b"):
         m = PAPER_MODELS[mname]
         tr = inference_trace(m, n_requests=256, max_new=128, batch=16)
-        for alloc in ("caching", "gmlake"):
+        for alloc in allocs:
             res, us = timed(run_workload, tr, alloc, capacity_bytes=80 * GB)
             rows.append(Row(
                 f"serve/{mname}/{alloc}", us, res.utilization,
@@ -48,7 +51,7 @@ def stitch_data_path() -> list:
     return rows
 
 
-def run(fast: bool = False) -> None:
-    emit(kv_churn(), "Serving: KV-cache churn, caching vs GMLake")
+def run(fast: bool = False, allocators: Optional[Sequence[str]] = None) -> None:
+    emit(kv_churn(allocators), "Serving: KV-cache churn across allocator backends")
     if not fast:
         emit(stitch_data_path(), "Serving: stitched gather data path (host ref)")

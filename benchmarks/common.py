@@ -28,6 +28,9 @@ class Row:
     us_per_call: float
     derived: float
     extra: str = ""
+    #: optional machine-readable metrics merged into the JSON row (e.g. the
+    #: load-independent modeled-cost numbers the regression gate prefers)
+    metrics: Optional[dict] = None
 
     def csv(self) -> str:
         base = f"{self.name},{self.us_per_call:.1f},{self.derived:.6g}"
@@ -37,6 +40,8 @@ class Row:
         d = {"name": self.name, "us_per_call": self.us_per_call, "derived": self.derived}
         if self.extra:
             d["extra"] = self.extra
+        if self.metrics:
+            d.update(self.metrics)
         return d
 
 

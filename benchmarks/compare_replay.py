@@ -1,25 +1,31 @@
-"""Diff two BENCH_replay.json files and flag µs/event regressions.
+"""Diff two BENCH_replay.json files and flag replay regressions.
 
 CI calls this with the previous successful run's artifact as the baseline and
 the fresh run's output as the candidate:
 
     python -m benchmarks.compare_replay baseline.json candidate.json \
-        [--threshold 0.20] [--annotate-only]
+        [--threshold 0.20] [--model-threshold 0.02] [--annotate-only]
+
+The gate is **two-tier**, modeled cost first, wall time second:
+
+  1. ``model_cost_per_event`` — the VMMCostLedger's modeled device-API cost
+     (cuMalloc units). It is a pure function of the allocator's decisions on
+     the fixed-seed trace: bit-stable across machines and container load.
+     Any drift beyond ``--model-threshold`` (default 2%) means allocation
+     *policy* changed — a real finding regardless of how noisy the runner
+     is, flagged as ``model`` regressions.
+  2. ``us_per_call`` — host wall time, the number users feel, but noisy
+     (~±20 % on a loaded runner). Gated at the looser ``--threshold``.
 
 Exit codes: 0 = no regression (or --annotate-only), 1 = at least one
-trace x allocator pair regressed by more than the threshold, or the
-candidate file itself is unreadable (a defect in this very run, never
-suppressed). A missing or unreadable *baseline* (corrupt artifact, schema
-drift in perf history) warns and exits 0 — an absent perf history must
-never block the build.
-
-Replay numbers are host wall time, so run-to-run noise is real (~±20 % on a
-loaded runner); the default threshold is set at that noise floor, and CI
-runs the *fast* traces where absolute times are small but ratios are stable.
-Rows present on only one side (renamed traces, new allocators) are reported
-but never fail the check. GitHub-flavoured ``::warning``/``::error``
-annotations are emitted for every finding so regressions surface on the PR
-without digging through logs.
+trace x allocator pair regressed on either tier, or the candidate file
+itself is unreadable (a defect in this very run, never suppressed). A
+missing or unreadable *baseline* (corrupt artifact, schema drift in perf
+history) warns and exits 0 — an absent perf history must never block the
+build. Rows present on only one side (renamed traces, new allocators) are
+reported but never fail the check. GitHub-flavoured ``::warning``/
+``::error`` annotations are emitted for every finding so regressions
+surface on the PR without digging through logs.
 """
 
 from __future__ import annotations
@@ -31,27 +37,49 @@ import sys
 
 def _rows(payload: dict) -> dict:
     try:
-        return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+        return {
+            r["name"]: (float(r["us_per_call"]), r.get("model_cost_per_event"))
+            for r in payload["rows"]
+        }
     except (KeyError, TypeError) as e:
         raise ValueError(f"not a BENCH_replay.json payload: {e}") from e
 
 
-def compare(baseline: dict, candidate: dict, threshold: float):
-    """Returns (regressions, improvements, missing) row-name keyed dicts."""
+def compare(baseline: dict, candidate: dict, threshold: float, model_threshold: float):
+    """Returns (regressions, improvements, missing).
+
+    ``regressions``/``improvements`` map row name -> (signal, old, new,
+    ratio) where ``signal`` is ``"model"`` (modeled device-API cost — the
+    load-independent tier, checked first) or ``"wall"`` (host µs/event).
+    A row only reaches the wall tier if its modeled signal is clean, so a
+    policy change is always attributed to the modeled number.
+    """
     base = _rows(baseline)
     cand = _rows(candidate)
     regressions, improvements = {}, {}
-    for name, new_us in cand.items():
-        old_us = base.get(name)
-        if old_us is None or old_us <= 0:
+    for name, (new_us, new_model) in cand.items():
+        entry = base.get(name)
+        if entry is None:
             continue
-        ratio = new_us / old_us
-        if ratio > 1.0 + threshold:
-            regressions[name] = (old_us, new_us, ratio)
-        elif ratio < 1.0 - threshold:
-            improvements[name] = (old_us, new_us, ratio)
+        old_us, old_model = entry
+        if old_model and new_model is not None:
+            ratio = new_model / old_model
+            if ratio > 1.0 + model_threshold:
+                regressions[name] = ("model", old_model, new_model, ratio)
+                continue  # modeled drift explains (and outranks) any wall drift
+            if ratio < 1.0 - model_threshold:
+                improvements[name] = ("model", old_model, new_model, ratio)
+        if old_us > 0:
+            ratio = new_us / old_us
+            if ratio > 1.0 + threshold:
+                regressions[name] = ("wall", old_us, new_us, ratio)
+            elif ratio < 1.0 - threshold and name not in improvements:
+                improvements[name] = ("wall", old_us, new_us, ratio)
     missing = sorted(set(base) - set(cand))
     return regressions, improvements, missing
+
+
+_UNITS = {"model": "model-cost/event", "wall": "us/event"}
 
 
 def main(argv=None) -> int:
@@ -60,7 +88,12 @@ def main(argv=None) -> int:
     ap.add_argument("candidate", help="this run's BENCH_replay.json")
     ap.add_argument(
         "--threshold", type=float, default=0.20,
-        help="fractional us/event increase that counts as a regression",
+        help="fractional us/event increase that counts as a wall regression",
+    )
+    ap.add_argument(
+        "--model-threshold", type=float, default=0.02,
+        help="fractional modeled-cost increase that counts as a policy "
+        "regression (load-independent, so the default is tight)",
     )
     ap.add_argument(
         "--annotate-only", action="store_true",
@@ -79,25 +112,28 @@ def main(argv=None) -> int:
         with open(args.candidate) as f:
             candidate = json.load(f)
         regressions, improvements, missing = compare(
-            baseline, candidate, args.threshold
+            baseline, candidate, args.threshold, args.model_threshold
         )
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"::error::replay perf candidate unreadable: {e}")
         return 1
 
-    for name, (old, new, ratio) in sorted(improvements.items()):
-        print(f"::notice::replay perf {name}: {old:.1f} -> {new:.1f} us/event "
-              f"({ratio:.2f}x, improvement)")
+    for name, (sig, old, new, ratio) in sorted(improvements.items()):
+        print(f"::notice::replay perf {name}: {old:.2f} -> {new:.2f} "
+              f"{_UNITS[sig]} ({ratio:.2f}x, improvement)")
     for name in missing:
         print(f"::warning::replay perf {name}: present in baseline, missing now")
-    for name, (old, new, ratio) in sorted(regressions.items()):
+    for name, (sig, old, new, ratio) in sorted(regressions.items()):
         level = "warning" if args.annotate_only else "error"
-        print(f"::{level}::replay perf regression {name}: "
-              f"{old:.1f} -> {new:.1f} us/event ({ratio:.2f}x, "
-              f"threshold {1.0 + args.threshold:.2f}x)")
+        what = "policy (modeled-cost)" if sig == "model" else "wall-time"
+        thresh = args.model_threshold if sig == "model" else args.threshold
+        print(f"::{level}::replay {what} regression {name}: "
+              f"{old:.2f} -> {new:.2f} {_UNITS[sig]} ({ratio:.2f}x, "
+              f"threshold {1.0 + thresh:.2f}x)")
     if not regressions:
         print(f"replay perf: {len(candidate.get('rows', []))} rows within "
-              f"{args.threshold:.0%} of baseline")
+              f"thresholds (model {args.model_threshold:.0%}, "
+              f"wall {args.threshold:.0%}) of baseline")
     return 1 if regressions and not args.annotate_only else 0
 
 

@@ -1,10 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+                                            [--allocator NAME ...]
 
 Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
     alloc_latency  Fig 6 + Table 1 + native-vs-caching (~10x)
-    strategies     Fig 3/10  (N/R/LR/RO/LRO x caching/gmlake)
+    strategies     Fig 3/10  (N/R/LR/RO/LRO x allocator backends)
     scaleout       Fig 4/11  (1..16 GPUs)
     platforms      Fig 12    (deepspeed / fsdp / colossal)
     end2end        Fig 13    (batch sweep + OOM frontier + throughput)
@@ -12,11 +13,19 @@ Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
     serving        beyond-paper: stitched KV arena under churn
     replay         host-side replay throughput (events/sec + BENCH_replay.json)
     roofline       assignment: dry-run roofline table
+
+``--allocator`` (repeatable) sets the backend axis of the modules that
+have one (strategies, serving, replay) to the given registry keys — e.g.
+``--allocator stalloc`` to profile just the planning backend. Defaults
+when the flag is absent: ``replay`` covers every backend in
+``repro.alloc.registry``; ``strategies``/``serving`` reproduce the
+paper's caching-vs-gmlake pair.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -25,7 +34,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument(
+        "--allocator",
+        action="append",
+        default=None,
+        metavar="NAME",
+        help="restrict the allocator axis to this registry key (repeatable)",
+    )
     args = ap.parse_args()
+
+    if args.allocator:
+        from repro.alloc import registry
+
+        unknown = [n for n in args.allocator if n not in registry.names()]
+        if unknown:
+            print(
+                f"error: unknown allocator(s) {', '.join(map(repr, unknown))}; "
+                f"registered: {', '.join(registry.names())}",
+                file=sys.stderr,
+            )
+            sys.exit(2)
 
     from . import (
         bench_alloc_latency,
@@ -61,7 +89,13 @@ def main() -> None:
     t0 = time.time()
     for name in names:
         print(f"\n== {name} " + "=" * (60 - len(name)))
-        modules[name].run(fast=args.fast)
+        run_fn = modules[name].run
+        kwargs = {"fast": args.fast}
+        # modules with an allocator axis take `allocators`; the rest are
+        # figure-specific and ignore the flag
+        if args.allocator and "allocators" in inspect.signature(run_fn).parameters:
+            kwargs["allocators"] = args.allocator
+        run_fn(**kwargs)
     print(f"\n# total benchmark wall: {time.time() - t0:.1f}s")
 
 

@@ -1,12 +1,15 @@
 """Quickstart: GMLake in 60 seconds.
 
 Runs the paper's Figure-1 scenario (splitting strands memory; stitching
-recovers it), then replays a real fine-tuning allocation trace through the
-PyTorch-style caching allocator and GMLake side by side.
+recovers it), then replays a real fine-tuning allocation trace through
+EVERY registered allocator backend side by side — the PyTorch-style
+caching baseline, GMLake's VMS stitching, and the STAlloc-style
+spatio-temporal planner.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+from repro.alloc import registry
 from repro.core import (
     GB, MB, AllocatorOOM, CachingAllocator, GMLakeAllocator, PAPER_MODELS,
     VMMDevice, run_workload, training_trace,
@@ -28,11 +31,13 @@ for name, cls in (("caching", CachingAllocator), ("gmlake", GMLakeAllocator)):
         print(f"{name:8s}: OOM — free memory exists but is fragmented")
 
 # --- paper workload: OPT-13B fine-tune, LoRA+recompute+offload, 4 GPUs -----
-print("\n== OPT-13B LRO trace on 80 GB (paper Fig. 10) ==")
+# every backend in the registry is a drop-in: a name is all run_workload
+# needs (planning backends get their profile pass automatically)
+print("\n== OPT-13B LRO trace on 80 GB, all backends (paper Fig. 10) ==")
 trace = training_trace(PAPER_MODELS["opt-13b"], strategies="LRO", world=4,
                        batch=8, seq=2048, iters=8)
 print(f"trace: {trace.n_allocs} allocations, mean {trace.mean_alloc_mb:.0f} MB")
-for name in ("caching", "gmlake"):
+for name in registry.names():
     r = run_workload(trace, name, capacity_bytes=80 * GB)
     print(f"{name:8s}: utilization={r.utilization:.1%}  "
           f"peak reserved={r.reserved_gb:.1f} GB  "

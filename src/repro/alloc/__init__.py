@@ -1,0 +1,91 @@
+"""repro.alloc — the pluggable allocation-policy subsystem.
+
+Layout (bottom-up):
+
+  chunks             device model: 2 MB physical chunks, extents, the
+                     VMM API cost ledger (paper Table 1 / Fig. 6)
+  metrics            AllocatorStats / ReplayResult / fragmentation math
+  protocol           AllocatorProtocol + AllocatorCapabilities: the one
+                     contract every backend implements
+  registry           string-keyed backend registry; ``registry.names()``
+                     drives every backend-generic consumer
+  caching_allocator  "native" and "caching" backends (the paper's
+                     baselines, §2.2)
+  gmlake             "gmlake" backend — virtual-memory stitching
+                     (the paper's contribution, §3–§4)
+  stalloc            "stalloc" backend — spatio-temporal planning from a
+                     profiled trace (after arXiv 2507.16274)
+
+Adding a backend: subclass nothing — implement the protocol, decorate the
+class with ``@registry.register("yourname", AllocatorCapabilities(...))``,
+import the module here, and every consumer (trace replay, Arena,
+ServeEngine, ``benchmarks/run.py --allocator yourname``) picks it up.
+
+``repro.core`` re-exports this module's public names so pre-refactor
+imports (``from repro.core import gmlake``) keep working.
+"""
+
+from . import registry
+from .chunks import (
+    CHUNK_SIZE,
+    DEFAULT_FRAG_LIMIT,
+    GB,
+    MB,
+    SMALL_ALLOC_LIMIT,
+    DeviceOOM,
+    Extent,
+    VMMCostLedger,
+    VMMDevice,
+    num_chunks,
+    pack_extent_runs,
+    pack_extents,
+    round_up,
+    unpack_extents,
+)
+from .metrics import AllocatorStats, ReplayResult, mem_reduction_ratio
+from .protocol import AllocatorCapabilities, AllocatorProtocol
+
+# backend modules self-register on import; import order fixes the
+# registry's (stable) iteration order
+from .caching_allocator import (
+    Allocation,
+    AllocatorOOM,
+    CachingAllocator,
+    NativeAllocator,
+)
+from .gmlake import GMLakeAllocator, PBlock, SBlock
+from .stalloc import PlacementPlan, PlannedBlock, STAllocAllocator, build_plan
+
+__all__ = [
+    "registry",
+    "CHUNK_SIZE",
+    "DEFAULT_FRAG_LIMIT",
+    "GB",
+    "MB",
+    "SMALL_ALLOC_LIMIT",
+    "DeviceOOM",
+    "Extent",
+    "VMMCostLedger",
+    "VMMDevice",
+    "num_chunks",
+    "pack_extent_runs",
+    "pack_extents",
+    "round_up",
+    "unpack_extents",
+    "AllocatorStats",
+    "ReplayResult",
+    "mem_reduction_ratio",
+    "AllocatorCapabilities",
+    "AllocatorProtocol",
+    "Allocation",
+    "AllocatorOOM",
+    "CachingAllocator",
+    "NativeAllocator",
+    "GMLakeAllocator",
+    "PBlock",
+    "SBlock",
+    "PlacementPlan",
+    "PlannedBlock",
+    "STAllocAllocator",
+    "build_plan",
+]

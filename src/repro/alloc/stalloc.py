@@ -1,0 +1,357 @@
+"""STAlloc-style spatio-temporal planning allocator (after arXiv 2507.16274).
+
+Where GMLake *reacts* to fragmentation at runtime (stitching inactive
+physical chunks under a fresh VA), STAlloc-style planning *prevents* it
+offline: profile one run of the workload to learn every allocation's
+(alloc-time, free-time, size) interval, solve the 2D placement problem —
+time on one axis, address offset on the other — ahead of time, and replay
+with the planned placements. The runtime allocator is then trivially cheap:
+a planned malloc is an array lookup, a planned free is a counter update,
+and the device sees exactly ONE upfront reservation of the plan's peak.
+
+Two-phase operation:
+
+  phase 1 — ``build_plan(trace)`` (offline, not on the timed path):
+    * profile the trace into lifetime intervals,
+    * split them STAlloc-style into a **static region** (intervals that
+      live to the end of the trace: parameters, optimizer state — packed
+      back-to-back at the bottom, where they can never fragment anything)
+      and a **transient region** above it,
+    * place transient intervals by best-fit over free spans of the planned
+      address range, replaying alloc/free order with *known* lifetimes and
+      coalescing on free. The peak watermark of this placement is the
+      plan's capacity — the single number the runtime reserves.
+
+  phase 2 — ``STAllocAllocator`` (runtime): hands out planned placements
+    in profiled arrival order, verifying each request's rounded size
+    against the plan. Any divergence — a request the profile never saw, a
+    replay of a different trace — falls back to an embedded BFC pool on
+    the same device, so the allocator is total: it serves any stream,
+    planned or not. (Planned placements are only guaranteed disjoint when
+    the profiled trace is what's being replayed — the same contract as
+    STAlloc's own offline plans.)
+
+Registered as backend key ``"stalloc"`` with ``capabilities.planning``:
+the replay harness calls ``prepare(trace)`` once, outside the timed loop.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .caching_allocator import (
+    MIN_BLOCK_SIZE,
+    Allocation,
+    AllocatorOOM,
+    CachingAllocator,
+)
+from .chunks import DeviceOOM, VMMDevice, round_up
+from .metrics import AllocatorStats
+from .protocol import AllocatorCapabilities
+from .registry import register
+
+
+class PlannedBlock:
+    """A planned placement: one [offset, offset+size) slice of the arena."""
+
+    __slots__ = ("offset", "size", "held")
+
+    def __init__(self, offset: int, size: int):
+        self.offset = offset
+        self.size = size
+        self.held = True  # flipped by free; guards double-free
+
+    def __repr__(self):
+        return f"PlannedBlock(off={self.offset}, size={self.size >> 20}MB)"
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    """Output of the offline planning pass: placements + peak capacity.
+
+    ``offsets``/``sizes`` are parallel tuples indexed by *profiled arrival
+    order* (the j-th alloc event of the trace). ``capacity`` is the peak
+    watermark of the placement — the bytes the runtime reserves upfront.
+    """
+
+    capacity: int
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    static_bytes: int  # bottom region: trace-lifetime intervals
+    n_events: int  # provenance: length of the profiled trace
+    plan_seconds: float  # wall time of the planning pass itself
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.offsets)
+
+
+def _profile_intervals(events, granularity: int):
+    """Pass 1: (start_event, end_event, rounded_size) per alloc, in order.
+
+    ``end_event`` is ``len(events)`` for allocations never freed in the
+    profile — those are the static region.
+    """
+    n = len(events)
+    starts: List[int] = []
+    sizes: List[int] = []
+    ends: List[int] = []
+    open_req: Dict[int, int] = {}  # tid -> request index
+    for i, ev in enumerate(events):
+        if ev.op == "alloc":
+            open_req[ev.tid] = len(starts)
+            starts.append(i)
+            sizes.append(round_up(ev.size, granularity))
+            ends.append(n)  # provisional: lives forever
+        elif ev.op == "free":
+            j = open_req.pop(ev.tid, None)
+            if j is not None:
+                ends[j] = i
+    return starts, ends, sizes
+
+
+class _SpanAllocator:
+    """Best-fit placement over an open-ended offset range (planner only).
+
+    Free spans are kept offset-sorted and coalesced on free; allocation
+    takes the smallest adequate span (lowest offset on ties) or extends
+    the top watermark. This is the classical DSA heuristic the planning
+    literature starts from; running it *offline* is what removes the
+    online allocator's caching/segment overhead — the watermark IS the
+    reservation.
+    """
+
+    __slots__ = ("base", "top", "peak", "spans")
+
+    def __init__(self, base: int):
+        self.base = base
+        self.top = base  # end of the highest placement so far
+        self.peak = base
+        self.spans: List[List[int]] = []  # [offset, size], offset-ascending
+
+    def alloc(self, size: int) -> int:
+        best = -1
+        best_size = 0
+        for i, (off, sz) in enumerate(self.spans):
+            if sz >= size and (best < 0 or sz < best_size):
+                best = i
+                best_size = sz
+                if sz == size:
+                    break
+        if best < 0:
+            off = self.top
+            self.top = off + size
+            if self.top > self.peak:
+                self.peak = self.top
+            return off
+        off, sz = self.spans[best]
+        if sz == size:
+            self.spans.pop(best)
+        else:
+            self.spans[best] = [off + size, sz - size]
+        return off
+
+    def free(self, offset: int, size: int) -> None:
+        spans = self.spans
+        lo, hi = 0, len(spans)
+        while lo < hi:  # insertion point by offset
+            mid = (lo + hi) // 2
+            if spans[mid][0] < offset:
+                lo = mid + 1
+            else:
+                hi = mid
+        # coalesce with the predecessor / successor where adjacent
+        if lo > 0 and spans[lo - 1][0] + spans[lo - 1][1] == offset:
+            spans[lo - 1][1] += size
+            if lo < len(spans) and offset + size == spans[lo][0]:
+                spans[lo - 1][1] += spans[lo][1]
+                spans.pop(lo)
+            lo -= 1
+        elif lo < len(spans) and offset + size == spans[lo][0]:
+            spans[lo][0] = offset
+            spans[lo][1] += size
+        else:
+            spans.insert(lo, [offset, size])
+        # a span touching the watermark retracts it (keeps spans compact)
+        last = spans[-1]
+        if last[0] + last[1] == self.top:
+            self.top = last[0]
+            spans.pop()
+
+
+def build_plan(trace, granularity: int = MIN_BLOCK_SIZE) -> PlacementPlan:
+    """The offline spatio-temporal planning pass (see module docstring)."""
+    t0 = time.perf_counter()
+    events = getattr(trace, "events", trace)
+    starts, ends, sizes = _profile_intervals(events, granularity)
+    n_events = len(events)
+
+    # static region: intervals alive at end-of-trace stack at the bottom in
+    # arrival order. They can never be freed mid-run, so nothing above them
+    # ever has to route around a hole they leave.
+    offsets: List[int] = [0] * len(starts)
+    static_top = 0
+    for j, end in enumerate(ends):
+        if end >= n_events:
+            offsets[j] = static_top
+            static_top += sizes[j]
+
+    # transient region: replay the interval endpoints in event order
+    # through best-fit placement with known lifetimes. Each event index is
+    # one alloc or one free, and ``starts`` is ascending by construction,
+    # so a single merged sweep visits every endpoint in trace order.
+    sim = _SpanAllocator(static_top)
+    frees_at: Dict[int, int] = {}  # free-event index -> request index
+    for j, end in enumerate(ends):
+        if end < n_events:
+            frees_at[end] = j
+    k = 0  # next interval to place
+    n_requests = len(starts)
+    for i in range(n_events):
+        j = frees_at.get(i)
+        if j is not None:
+            sim.free(offsets[j], sizes[j])
+        elif k < n_requests and starts[k] == i:
+            if ends[k] < n_events:
+                offsets[k] = sim.alloc(sizes[k])
+            k += 1
+
+    return PlacementPlan(
+        capacity=sim.peak,
+        offsets=tuple(offsets),
+        sizes=tuple(sizes),
+        static_bytes=static_top,
+        n_events=n_events,
+        plan_seconds=time.perf_counter() - t0,
+    )
+
+
+@register(
+    "stalloc",
+    AllocatorCapabilities(caching=True, planning=True, releases_cached=True),
+)
+class STAllocAllocator:
+    """Runtime half of the planner: planned placements + BFC fallback.
+
+    The runtime hot path is deliberately thin — a planned malloc costs one
+    tuple index and one size comparison, a planned free costs one stats
+    update, and the device model is charged ONE ``cuMalloc`` for the whole
+    plan (the paper-world equivalent of a single upfront reservation).
+    Everything the profile did not predict goes to the embedded BFC pool.
+    """
+
+    name = "stalloc"
+
+    def __init__(
+        self,
+        device: VMMDevice,
+        plan: Optional[PlacementPlan] = None,
+        record_timeline: bool = False,
+        granularity: int = MIN_BLOCK_SIZE,
+    ):
+        self.device = device
+        self.stats = AllocatorStats(record_timeline=record_timeline)
+        self.plan = plan
+        self.granularity = granularity
+        self._cursor = 0  # arrival index of the next planned request
+        self._plan_reserved = 0  # plan.capacity once the arena is reserved
+        self._fallback = CachingAllocator(device)
+        self.planned_allocs = 0
+        self.fallback_allocs = 0
+
+    # -- planning hooks -------------------------------------------------------
+    @property
+    def needs_prepare(self) -> bool:
+        return self.plan is None
+
+    def prepare(self, trace) -> PlacementPlan:
+        """Profile + plan ``trace`` (phase 1). Called off the timed path.
+
+        One instance serves one plan: re-planning after the arena is
+        reserved or placements were handed out would desynchronise the
+        cursor, the reservation, and the plan — refuse instead.
+        """
+        if self._cursor or self._plan_reserved:
+            raise RuntimeError(
+                "stalloc instance has already served planned requests; "
+                "construct a fresh backend to plan another trace"
+            )
+        self.plan = build_plan(trace, self.granularity)
+        return self.plan
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def reserved_bytes(self) -> int:
+        return self._plan_reserved + self._fallback.reserved_bytes
+
+    def release_cached(self) -> int:
+        """The planned arena is one live reservation sized to the plan's
+        peak — nothing cached there to give back; the fallback pool's free
+        segments are released."""
+        return self._fallback.release_cached()
+
+    # -- allocation -----------------------------------------------------------
+    def _reserve_arena(self) -> None:
+        cap = self.plan.capacity
+        if cap:
+            try:
+                self.device.cu_malloc(cap)
+            except DeviceOOM as e:
+                raise AllocatorOOM(
+                    f"stalloc plan needs {cap} bytes upfront "
+                    f"(device_free={self.device.free_bytes})"
+                ) from e
+            self._plan_reserved = cap
+
+    def malloc(self, size: int) -> Allocation:
+        plan = self.plan
+        j = self._cursor
+        rsize = round_up(size, self.granularity)
+        if plan is not None and j < len(plan.sizes) and plan.sizes[j] == rsize:
+            if not self._plan_reserved:
+                self._reserve_arena()
+            self._cursor = j + 1
+            self.planned_allocs += 1
+            block = PlannedBlock(plan.offsets[j], rsize)
+            self.stats.on_alloc(rsize, self.reserved_bytes)
+            return Allocation(
+                req_size=size, block_size=rsize, block=block, owner=self
+            )
+        # divergence from the profile: serve from the BFC pool instead. The
+        # cursor does not advance, so one unexpected request cannot shift
+        # every subsequent planned placement out of alignment.
+        alloc = self._fallback.malloc(size)
+        alloc.owner = self
+        self.fallback_allocs += 1
+        # the fallback already counted itself; ours is the published stats
+        self.stats.on_alloc(alloc.block_size, self.reserved_bytes)
+        return alloc
+
+    def free(self, alloc: Allocation) -> None:
+        block = alloc.block
+        if isinstance(block, PlannedBlock):
+            assert block.held, "double free of planned block"
+            block.held = False
+            self.stats.on_free(alloc.block_size, self.reserved_bytes)
+            return
+        self._fallback.free(alloc)
+        self.stats.on_free(alloc.block_size, self.reserved_bytes)
+
+    # -- debug / test support -------------------------------------------------
+    def check_invariants(self) -> None:
+        if self.plan is not None:
+            assert self._cursor <= self.plan.n_requests
+            assert self._plan_reserved in (0, self.plan.capacity)
+        else:
+            assert self._cursor == 0 and self._plan_reserved == 0
+        self._fallback.check_invariants()
+
+
+__all__ = [
+    "PlacementPlan",
+    "PlannedBlock",
+    "STAllocAllocator",
+    "build_plan",
+]

@@ -1,32 +1,48 @@
-"""GMLake core: virtual-memory-stitching allocation (the paper's contribution).
+"""GMLake core: traces + JAX integrations over the ``repro.alloc`` backends.
 
-Layers (bottom-up): chunks (device model + extents) -> caching_allocator
-(BFC baseline) / gmlake (VMS allocator) -> trace (workload synthesis +
-replay) -> arena / kvcache / offload (JAX integrations).
+The allocator stack itself (chunks/device model, BFC baseline, GMLake VMS,
+STAlloc planning, protocol + registry) lives in ``repro.alloc``; this
+package keeps the workload layer — trace (synthesis + backend-generic
+replay) -> arena / kvcache / offload (JAX integrations) — and re-exports
+the allocator names for compatibility with pre-refactor imports
+(``from repro.core import GMLakeAllocator`` and ``from repro.core.gmlake
+import ...`` both still work).
 """
 
-from .chunks import (
+from ..alloc import (
     CHUNK_SIZE,
     DEFAULT_FRAG_LIMIT,
     GB,
     MB,
     SMALL_ALLOC_LIMIT,
+    Allocation,
+    AllocatorCapabilities,
+    AllocatorOOM,
+    AllocatorProtocol,
+    AllocatorStats,
+    CachingAllocator,
     DeviceOOM,
     Extent,
+    GMLakeAllocator,
+    NativeAllocator,
+    PBlock,
+    PlacementPlan,
+    ReplayResult,
+    SBlock,
+    STAllocAllocator,
     VMMDevice,
+    build_plan,
+    mem_reduction_ratio,
     num_chunks,
     pack_extents,
+    registry,
     round_up,
     unpack_extents,
 )
-from .caching_allocator import (
-    Allocation,
-    AllocatorOOM,
-    CachingAllocator,
-    NativeAllocator,
-)
-from .gmlake import GMLakeAllocator, PBlock, SBlock
-from .metrics import AllocatorStats, ReplayResult, mem_reduction_ratio
+
+# submodule shims: importing them here keeps `repro.core.gmlake` (etc.)
+# resolvable as attributes of this package, exactly as before the move
+from . import caching_allocator, chunks, gmlake, metrics  # noqa: F401
 from .trace import (
     PAPER_MODELS,
     ModelDesc,
@@ -55,11 +71,17 @@ __all__ = [
     "unpack_extents",
     "Allocation",
     "AllocatorOOM",
+    "AllocatorCapabilities",
+    "AllocatorProtocol",
     "CachingAllocator",
     "NativeAllocator",
     "GMLakeAllocator",
     "PBlock",
     "SBlock",
+    "PlacementPlan",
+    "STAllocAllocator",
+    "build_plan",
+    "registry",
     "AllocatorStats",
     "ReplayResult",
     "mem_reduction_ratio",

@@ -19,10 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..alloc import registry
+from ..alloc.caching_allocator import Allocation
+from ..alloc.chunks import CHUNK_SIZE, VMMDevice
 from ..kernels import ops
-from .caching_allocator import Allocation
-from .chunks import CHUNK_SIZE, VMMDevice
-from .gmlake import GMLakeAllocator
 from .trace import TraceRecorder
 
 
@@ -49,15 +49,28 @@ class ArenaConfig:
 
 
 class Arena:
-    """GMLake allocator + device buffer + stitch-kernel access paths."""
+    """Allocator backend + device buffer + stitch-kernel access paths.
 
-    def __init__(self, config: ArenaConfig, allocator: Optional[GMLakeAllocator] = None,
+    ``allocator`` is backend-generic: a ``repro.alloc`` registry key
+    (default ``"gmlake"``), an already-constructed backend instance, or
+    None. Host-side allocation accounting (``alloc_elems``/``free``/
+    metrics) works with every backend; the device data-movement paths
+    (``chunk_map``/``store``/``load``) additionally require the backend's
+    blocks to carry chunk ``extents`` — i.e. a stitching backend — because
+    the Pallas kernels address physical chunks, not virtual offsets.
+    """
+
+    def __init__(self, config: ArenaConfig, allocator=None,
                  recorder: Optional[TraceRecorder] = None):
         self.config = config
-        self.device_model = (
-            allocator.device if allocator is not None else VMMDevice(config.capacity_bytes)
-        )
-        self.allocator = allocator or GMLakeAllocator(self.device_model)
+        if allocator is None:
+            allocator = "gmlake"
+        if isinstance(allocator, str):
+            self.device_model = VMMDevice(config.capacity_bytes)
+            self.allocator = registry.create(allocator, self.device_model)
+        else:
+            self.device_model = allocator.device
+            self.allocator = allocator
         self.recorder = recorder
         self.buf = jnp.zeros((config.n_chunks, config.chunk_elems), config.dtype)
         self._trace_ids: Dict[int, int] = {}
@@ -77,7 +90,19 @@ class Arena:
         if self.recorder is not None:
             self.recorder.free(self._trace_ids.pop(id(alloc)))
 
+    def require_stitching(self) -> None:
+        """Fail loudly when a device data path is used with a backend whose
+        blocks carry no chunk extents (capabilities.stitching is False)."""
+        caps = getattr(type(self.allocator), "capabilities", None)
+        if caps is None or not caps.stitching:
+            raise TypeError(
+                f"arena data movement needs a stitching backend whose blocks "
+                f"carry chunk extents; {self.allocator.name!r} is "
+                f"accounting-only here (alloc_elems/free/metrics still work)"
+            )
+
     def chunk_map(self, alloc: Allocation, pad_to: Optional[int] = None) -> jax.Array:
+        self.require_stitching()
         return ops.chunk_map_from_extents(alloc.block.extents, pad_to=pad_to)
 
     # ------------------------------------------------------------------

@@ -1,280 +1,13 @@
-"""Chunk/extent primitives and the VMM device model.
+"""Compatibility shim: ``repro.core.chunks`` moved to ``repro.alloc.chunks``.
 
-GMLake's physical unit is a fixed-size chunk (2 MB in the paper, §3.1). On
-GPU these are physical pages created by ``cuMemCreate``; on TPU we adapt them
-to slots of a pre-reserved HBM arena (see DESIGN.md §2). This module holds:
-
-  * the chunk-size constants and rounding helpers,
-  * ``Extent`` — a run of consecutive chunk ids (the unit of the extent
-    tables consumed by the Pallas stitch kernels),
-  * ``VMMDevice`` — a device model that tracks physical-chunk inventory and
-    charges per-API costs calibrated from the paper's own measurements
-    (Table 1 / Fig. 6), in units of one ``cuMalloc`` call.
-
-The device model is what lets the benchmarks regenerate the paper's latency
-microbenchmarks on hardware that has no CUDA driver.
+The allocator stack now lives under ``repro.alloc`` (see
+docs/ARCHITECTURE.md). This module aliases itself to the new location so
+every pre-refactor import — public names and private helpers alike —
+keeps resolving. New code should import from ``repro.alloc``.
 """
 
-from __future__ import annotations
+import sys
 
-import itertools
-import math
-from dataclasses import dataclass, field
-from functools import lru_cache
-from typing import Iterable, List, Optional
+from ..alloc import chunks as _impl
 
-MB = 1024 * 1024
-GB = 1024 * MB
-
-#: GMLake uses a uniform 2 MB chunk (paper §3.1).
-CHUNK_SIZE = 2 * MB
-
-#: Requests below one chunk fall through to the splitting (caching) pool.
-SMALL_ALLOC_LIMIT = CHUNK_SIZE
-
-#: "minimal fragmentation limit ... (e.g., 128 MB)" — paper §4.2.3.
-DEFAULT_FRAG_LIMIT = 128 * MB
-
-
-def round_up(size: int, granularity: int = CHUNK_SIZE) -> int:
-    if size <= 0:
-        raise ValueError(f"allocation size must be positive, got {size}")
-    return ((size + granularity - 1) // granularity) * granularity
-
-
-def num_chunks(size: int) -> int:
-    return round_up(size) // CHUNK_SIZE
-
-
-@dataclass(frozen=True)
-class Extent:
-    """A run of ``n`` consecutive chunks starting at chunk id ``start``.
-
-    Extent tables (lists of extents) are the TPU-side replacement for the
-    GPU's VA->PA page mapping: the Pallas kernels walk them with scalar
-    prefetch to issue chunk-granular DMA.
-    """
-
-    start: int
-    n: int
-
-    def __post_init__(self) -> None:
-        if self.start < 0 or self.n <= 0:
-            raise ValueError(f"bad extent ({self.start}, {self.n})")
-
-    @property
-    def stop(self) -> int:
-        return self.start + self.n
-
-    @property
-    def nbytes(self) -> int:
-        return self.n * CHUNK_SIZE
-
-
-def pack_extents(chunk_ids: Iterable[int]) -> List[Extent]:
-    """Compress an ordered chunk-id list into maximal consecutive runs."""
-    out: List[Extent] = []
-    for cid in chunk_ids:
-        if out and cid == out[-1].stop:
-            out[-1] = Extent(out[-1].start, out[-1].n + 1)
-        else:
-            out.append(Extent(cid, 1))
-    return out
-
-
-def pack_extent_runs(chunk_runs: Iterable[Iterable[int]]) -> List[Extent]:
-    """``pack_extents`` over a sequence of chunk-id runs without concatenating.
-
-    Runs merge across boundaries exactly as if the ids were one flat list —
-    this is the extent-table builder for stitched blocks, whose chunk ids
-    live in per-member lists.
-    """
-    return pack_extents(itertools.chain.from_iterable(chunk_runs))
-
-
-def unpack_extents(extents: Iterable[Extent]) -> List[int]:
-    out: List[int] = []
-    for e in extents:
-        out.extend(range(e.start, e.stop))
-    return out
-
-
-# ---------------------------------------------------------------------------
-# VMM cost model (paper Table 1 / Fig. 6)
-# ---------------------------------------------------------------------------
-
-# Per-allocation totals from Table 1: allocating 2 GB out of chunks of the
-# given size, normalized to one cuMalloc call of the full 2 GB. We divide by
-# the number of per-chunk calls to get per-call costs and interpolate in
-# log-log space for intermediate chunk sizes.
-_TABLE1_CHUNK_SIZES = (2 * MB, 128 * MB, 1024 * MB)
-_TABLE1_CALLS = tuple(2 * GB // s for s in _TABLE1_CHUNK_SIZES)  # (1024, 16, 2)
-_TABLE1_TOTALS = {
-    # api: totals at chunk sizes 2MB / 128MB / 1024MB (in cuMalloc units)
-    "cuMemAddressReserve": (0.003, 0.003, 0.002),  # one call per allocation
-    "cuMemCreate": (18.1, 0.89, 0.79),
-    "cuMemMap": (0.70, 0.01, 0.002),
-    "cuMemSetAccess": (96.8, 8.2, 0.7),
-}
-
-#: cuMalloc / cuFree cost: the unit. cudaFree additionally synchronizes the
-#: device; the ~10x end-to-end gap between the native allocator and the
-#: caching allocator (paper §2.2) comes from those synchronizations stalling
-#: pending kernels, which we fold into a sync surcharge.
-CUMALLOC_COST = 1.0
-CUFREE_COST = 1.0
-DEVICE_SYNC_COST = 4.0
-
-
-@lru_cache(maxsize=None)
-def _per_call_cost(api: str, chunk_size: int) -> float:
-    """Pure log-log interpolation of Table 1; cached — it sits on the
-    per-allocation ledger path and only ever sees a handful of chunk sizes."""
-    totals = _TABLE1_TOTALS[api]
-    if api == "cuMemAddressReserve":
-        # one call regardless of chunking; interpolate the totals directly
-        per = totals
-        calls = (1, 1, 1)
-    else:
-        per = tuple(t / c for t, c in zip(totals, _TABLE1_CALLS))
-        calls = _TABLE1_CALLS
-    xs = [math.log(s) for s in _TABLE1_CHUNK_SIZES]
-    ys = [math.log(p) for p in per]
-    x = math.log(min(max(chunk_size, _TABLE1_CHUNK_SIZES[0]), _TABLE1_CHUNK_SIZES[-1]))
-    # piecewise-linear in log-log space
-    if x <= xs[1]:
-        t = (x - xs[0]) / (xs[1] - xs[0])
-        y = ys[0] + t * (ys[1] - ys[0])
-    else:
-        t = (x - xs[1]) / (xs[2] - xs[1])
-        y = ys[1] + t * (ys[2] - ys[1])
-    return math.exp(y)
-
-
-@dataclass
-class VMMCostLedger:
-    """Accumulated modeled device-API cost, in cuMalloc units."""
-
-    by_api: dict = field(default_factory=dict)
-
-    def charge(self, api: str, cost: float, calls: int = 1) -> None:
-        entry = self.by_api.setdefault(api, [0.0, 0])
-        entry[0] += cost
-        entry[1] += calls
-
-    @property
-    def total(self) -> float:
-        return sum(v[0] for v in self.by_api.values())
-
-    @property
-    def total_calls(self) -> int:
-        return sum(v[1] for v in self.by_api.values())
-
-    def snapshot(self) -> dict:
-        return {k: tuple(v) for k, v in self.by_api.items()}
-
-
-class DeviceOOM(MemoryError):
-    """Raised by the device model when physical capacity is exhausted."""
-
-
-class VMMDevice:
-    """Physical-memory inventory + API cost model.
-
-    Models a device with ``capacity_bytes`` of HBM, handing out 2 MB
-    physical chunks (``cu_mem_create``) or classic contiguous segments
-    (``cu_malloc``). Contiguity of chunk ids is *not* guaranteed — freed
-    chunks are recycled LIFO, exactly the property that forces stitching.
-    """
-
-    def __init__(self, capacity_bytes: int, chunk_size: int = CHUNK_SIZE):
-        if capacity_bytes % chunk_size:
-            raise ValueError("capacity must be a multiple of the chunk size")
-        self.capacity_bytes = capacity_bytes
-        self.chunk_size = chunk_size
-        self.total_chunks = capacity_bytes // chunk_size
-        self._free_chunks: List[int] = list(range(self.total_chunks - 1, -1, -1))
-        self._segment_bytes = 0  # bytes held by cu_malloc segments
-        self.ledger = VMMCostLedger()
-        self._next_va = 0
-
-    # -- accounting ---------------------------------------------------------
-    @property
-    def used_bytes(self) -> int:
-        chunk_bytes = (self.total_chunks - len(self._free_chunks)) * self.chunk_size
-        return chunk_bytes + self._segment_bytes
-
-    @property
-    def free_bytes(self) -> int:
-        return self.capacity_bytes - self.used_bytes
-
-    # -- native allocator path ---------------------------------------------
-    def cu_malloc(self, size: int) -> int:
-        """Classic cudaMalloc: contiguous segment, charged 1 unit (+sync)."""
-        size = round_up(size, self.chunk_size)
-        if size > self.free_bytes:
-            raise DeviceOOM(f"cuMalloc({size}) with {self.free_bytes} free")
-        self._segment_bytes += size
-        self.ledger.charge("cuMalloc", CUMALLOC_COST)
-        va = self._next_va
-        self._next_va += size
-        return va
-
-    def cu_free(self, size: int, *, synchronize: bool = True) -> None:
-        size = round_up(size, self.chunk_size)
-        self._segment_bytes -= size
-        assert self._segment_bytes >= 0
-        cost = CUFREE_COST + (DEVICE_SYNC_COST if synchronize else 0.0)
-        self.ledger.charge("cuFree", cost)
-
-    # -- low-level VMM path ---------------------------------------------------
-    def cu_mem_address_reserve(self, size: int) -> int:
-        self.ledger.charge(
-            "cuMemAddressReserve", _per_call_cost("cuMemAddressReserve", self.chunk_size)
-        )
-        va = self._next_va
-        self._next_va += round_up(size, self.chunk_size)
-        return va
-
-    def cu_mem_create(self, n: int) -> List[int]:
-        """Create ``n`` physical chunks; ids are NOT contiguous in general."""
-        if n > len(self._free_chunks):
-            raise DeviceOOM(f"cuMemCreate({n} chunks) with {len(self._free_chunks)} free")
-        chunks = [self._free_chunks.pop() for _ in range(n)]
-        self.ledger.charge("cuMemCreate", n * _per_call_cost("cuMemCreate", self.chunk_size), n)
-        return chunks
-
-    def cu_mem_map(self, n: int) -> None:
-        self.ledger.charge("cuMemMap", n * _per_call_cost("cuMemMap", self.chunk_size), n)
-
-    def cu_mem_set_access(self, n: int) -> None:
-        self.ledger.charge(
-            "cuMemSetAccess", n * _per_call_cost("cuMemSetAccess", self.chunk_size), n
-        )
-
-    def cu_mem_unmap(self, n: int) -> None:
-        self.ledger.charge("cuMemUnmap", n * 0.01, n)
-
-    def cu_mem_release(self, chunks: Iterable[int]) -> None:
-        chunks = list(chunks)
-        self._free_chunks.extend(chunks)
-        self.ledger.charge("cuMemRelease", len(chunks) * 0.01, len(chunks))
-
-    def cu_mem_address_free(self) -> None:
-        self.ledger.charge("cuMemAddressFree", 0.003)
-
-    # -- composite helpers ----------------------------------------------------
-    def vmm_alloc(self, size: int) -> List[int]:
-        """Reserve + create + map + set-access for one block. Returns chunks."""
-        n = num_chunks(size)
-        self.cu_mem_address_reserve(size)
-        chunks = self.cu_mem_create(n)
-        self.cu_mem_map(n)
-        self.cu_mem_set_access(n)
-        return chunks
-
-    def vmm_map_existing(self, n: int) -> None:
-        """Stitch: reserve a VA and re-map ``n`` already-created chunks."""
-        self.cu_mem_address_reserve(n * self.chunk_size)
-        self.cu_mem_map(n)
-        self.cu_mem_set_access(n)
+sys.modules[__name__] = _impl

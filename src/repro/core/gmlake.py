@@ -1,1120 +1,11 @@
-"""GMLake: virtual-memory-stitching allocator (paper §3–§4).
+"""Compatibility shim: ``repro.core.gmlake`` moved to ``repro.alloc.gmlake``.
 
-Faithful reproduction of the paper's allocator on top of the chunk-granular
-device model (GPU physical pages -> arena chunk ids; see DESIGN.md §2):
-
-  * ``PBlock``   — primitive block: owns an ordered list of physical chunks
-                   plus its own VA reservation. Created only by ``_alloc_new``
-                   (paper: Alloc), divided only by ``_split`` (paper: Split).
-  * ``SBlock``   — stitched block: a VA reservation re-mapping the chunks of
-                   one or more pBlocks (paper: Stitch). Never split. Active
-                   iff any member pBlock is active.
-  * ``BestFit``  — Algorithm 1 verbatim: S1 exact match (the only state where
-                   an sBlock may be handed out), S2 single larger block,
-                   S3 stitch multiple blocks, S4 insufficient -> Alloc.
-  * Deallocation = ``Update`` (state flip only, physical memory kept),
-    ``StitchFree`` = LRU eviction of inactive sBlocks when the sPool exceeds
-    its VA budget (paper §4.2.3).
-  * Fragmentation limit (default 128 MB): blocks below it are neither split
-    nor used as stitch sources. Requests < 2 MB go to an embedded splitting
-    (caching) pool, as in the paper (§3.1).
-
-Emergency paths beyond the paper's letter (documented in DESIGN.md §7): on
-S4 shortfall we retry BestFit ignoring the fragmentation limit and release
-cached small-pool segments before declaring OOM — chunk-granular stitching
-guarantees every inactive byte is usable, which is the paper's
-"theoretically eliminates all fragmentation" claim (§4.2.1) made operational.
-
-Hot-path data structures (rounds 1 and 2 — see docs/ARCHITECTURE.md):
-
-  * Inactive pools are size-indexed bucket maps partitioned at the
-    fragmentation limit, with running byte totals (round 1). The S3/S4
-    decision reads one counter; the candidate walk only ever sees legal
-    stitch sources.
-  * StitchFree is a lazy-invalidation LRU min-heap of ``(last_use, sid)``
-    entries; stale entries are skipped at pop time (round 1).
-  * Each sBlock keeps a **position map** ``pos: pid -> slot index`` over a
-    slot list, so ``_split``'s member substitution is O(1) per referencing
-    sBlock instead of an O(members) ``list.index`` + tail shift, and the
-    split-away pBlock's key is dropped eagerly instead of lingering until
-    StitchFree destroys the sBlock (round 2).
-  * Activity uses a **per-sBlock activation generation counter**: a held
-    (handed-out) sBlock stamps its members with its current ``gen``;
-    a member is active iff it was handed out directly or its stamp matches
-    its holder's generation. ``free`` of a stitched block is therefore O(1)
-    — it bumps the generation and defers the structural work (pool
-    re-insertion, membership refcounts, byte totals) to a **batched
-    reconcile** that runs before the next pool read (round 2).
-  * S3 hands candidates out **per pool bucket**: the walk slices whole
-    bucket tails (blocks of one size) instead of re-querying and removing
-    per candidate, and aggregates membership refcount deltas in one Counter
-    pass (round 2).
-
-All of this is mechanical sympathy only. Replay behaviour — S1–S5 state
-counts, peak active/reserved bytes, OOM points — is bit-identical to the
-seed implementation; ``tests/test_golden_equivalence.py`` pins it.
+See docs/ARCHITECTURE.md for the ``repro.alloc`` layout. New code should
+import from ``repro.alloc``.
 """
 
-from __future__ import annotations
+import sys
 
-import itertools
-from bisect import bisect_left, insort
-from collections import Counter, deque
-from heapq import heapify, heappop, heappush
-from itertools import chain, repeat
-from operator import attrgetter
-from typing import Dict, Iterator, List, Optional, Tuple
+from ..alloc import gmlake as _impl
 
-from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
-from .chunks import (
-    CHUNK_SIZE,
-    DEFAULT_FRAG_LIMIT,
-    SMALL_ALLOC_LIMIT,
-    DeviceOOM,
-    Extent,
-    VMMDevice,
-    pack_extent_runs,
-    pack_extents,
-    round_up,
-)
-from .metrics import AllocatorStats
-
-_ids = itertools.count()
-
-
-class PBlock:
-    """Primitive block (paper: pBlock): an ordered chunk list + one VA.
-
-    Activity is *computed*, not stored: a pBlock is active iff it was handed
-    out directly (``direct``) or its generation stamp matches its holder
-    sBlock's current generation (``holder``/``holder_gen`` — see the module
-    docstring). Both tests are O(1); nothing iterates members to flip flags.
-    """
-
-    __slots__ = (
-        "pid", "size", "chunks", "direct", "holder", "holder_gen",
-        "sblocks", "va", "_extents",
-    )
-
-    def __init__(self, chunks: List[int], va: int = 0):
-        self.pid = next(_ids)
-        self.chunks = chunks
-        self.size = len(chunks) * CHUNK_SIZE
-        self.direct = False  # handed out on its own (S1/S2/S4 pBlock paths)
-        self.holder: Optional["SBlock"] = None  # last sBlock that held it
-        self.holder_gen = 0  # holder generation stamped at handout
-        self.sblocks: set = set()  # live sBlocks referencing this pBlock
-        self.va = va
-        self._extents: Optional[List[Extent]] = None
-
-    @property
-    def active(self) -> bool:
-        """O(1): directly handed out, or stamped by a currently-held holder."""
-        h = self.holder
-        return self.direct or (h is not None and self.holder_gen == h.gen)
-
-    @property
-    def extents(self) -> List[Extent]:
-        # chunks are immutable after construction (Split creates new pBlocks),
-        # so the packed form is computed once and reused by every kernel call.
-        if self._extents is None:
-            self._extents = pack_extents(self.chunks)
-        return self._extents
-
-    def __repr__(self):
-        return f"PBlock(id={self.pid}, size={self.size >> 20}MB, active={self.active})"
-
-
-class SBlock:
-    """Stitched block (paper: sBlock): a VA re-mapping member pBlock chunks.
-
-    Members start as a flat list; the slot structure — a list of slots, one
-    per original member, plus the position map ``pos: pid -> slot index`` —
-    is materialized lazily by the first ``_split`` that substitutes into this
-    sBlock (most sBlocks are never split into, so most never pay for it).
-    Once materialized, a substitution is O(1): ``pos`` names the slot, the
-    halves replace the parent *inside its slot*, and no other slot moves.
-    ``pblocks``/``chunks`` present the flattened view (chunk coverage is
-    identical across splits, so ``chunks`` caches forever).
-
-    ``gen`` is the activation generation: bumped on every handout and every
-    free. Handout stamps each member with the new value; free only bumps the
-    counter, which un-stamps all members at once (O(1) — the structural pool
-    work is deferred to ``GMLakeAllocator._reconcile``). ``active_members``
-    is the *reconciled* count of active members, used by the pool/LRU
-    machinery; ``active`` recomputes the truth from member stamps so it is
-    correct even between a free and the next reconcile.
-
-    While held, the block carries its own **free plan**: ``_plan`` groups
-    members by size for bucket-granular pool re-insertion (for a fresh
-    stitch its lists are the very bucket slices the take pass removed — no
-    per-member rebuilding) and ``_refs`` counts members per referencing
-    sBlock. Both are exact at free time because a held member's size and
-    membership set are frozen: splits and new stitches only touch inactive
-    pBlocks, and StitchFree can only destroy a fully-inactive sBlock, which
-    by the activity-exclusivity argument shares no member with any held one.
-    """
-
-    __slots__ = (
-        "sid", "size", "slots", "pos", "n_members", "active_members",
-        "gen", "held", "va", "last_use", "_members", "_plan", "_refs",
-        "_chunks", "_extents",
-    )
-
-    def __init__(
-        self,
-        pblocks: List[PBlock],
-        tick: int,
-        va: int = 0,
-        size: Optional[int] = None,
-        active_members: Optional[int] = None,
-        hold: bool = False,
-        refs: Optional[Counter] = None,
-        plan: Optional[Dict[int, list]] = None,
-    ):
-        self.sid = next(_ids)
-        self._members: Optional[List[PBlock]] = pblocks
-        self.slots: Optional[List[List[PBlock]]] = None  # lazy: see _split
-        self.pos: Optional[Dict[int, int]] = None
-        self.n_members = len(pblocks)
-        # callers that already know the totals pass them in; both are
-        # cross-checked against the members by check_invariants()
-        self.size = sum(p.size for p in pblocks) if size is None else size
-        self.active_members = (
-            sum(1 for p in pblocks if p.active)
-            if active_members is None
-            else active_members
-        )
-        self.gen = 1 if hold else 0
-        self.held = hold
-        self.va = va
-        self.last_use = tick
-        self._plan = plan
-        self._refs = refs
-        self._chunks: Optional[List[int]] = None
-        self._extents: Optional[List[Extent]] = None
-        if hold:  # handed out at creation (S3/S4): stamp every member
-            for p in pblocks:
-                p.holder = self
-                p.holder_gen = 1
-                p.sblocks.add(self)
-            # the free plan's refcounts: the candidates' memberships as
-            # counted by the take pass, plus this block itself
-            if refs is None:
-                self._refs = refs = Counter()
-            refs[self] = self.n_members
-        else:  # S2 opportunistic stitch: members keep their own activity
-            for p in pblocks:
-                p.sblocks.add(self)
-
-    def members(self) -> List[PBlock]:
-        """Current member list, split halves in place of their parent."""
-        if self.slots is None:
-            return self._members
-        return [p for slot in self.slots for p in slot]
-
-    def materialize_slots(self) -> None:
-        """Build the slot structure + position map on first substitution."""
-        if self.slots is None:
-            self.slots = [[p] for p in self._members]
-            self.pos = {p.pid: j for j, p in enumerate(self._members)}
-            self._members = None
-
-    @property
-    def pblocks(self) -> List[PBlock]:
-        """Flattened member list (compat alias for ``members()``)."""
-        return list(self.members())
-
-    @property
-    def active(self) -> bool:
-        """True iff any member is active. Exact even before a reconcile."""
-        return self.held or any(p.active for p in self.members())
-
-    @property
-    def chunks(self) -> List[int]:
-        # Split substitutes member pBlocks with halves covering the identical
-        # chunk sequence, so the concatenation can be cached forever.
-        if self._chunks is None:
-            out: List[int] = []
-            for p in self.members():
-                out.extend(p.chunks)
-            self._chunks = out
-        return self._chunks
-
-    @property
-    def extents(self) -> List[Extent]:
-        if self._extents is None:
-            self._extents = pack_extent_runs(p.chunks for p in self.members())
-        return self._extents
-
-    def __repr__(self):
-        return (
-            f"SBlock(id={self.sid}, size={self.size >> 20}MB, "
-            f"n_p={self.n_members}, active={self.active})"
-        )
-
-
-_get_sblocks = attrgetter("sblocks")
-
-
-def _key(block) -> int:
-    return block.pid if isinstance(block, PBlock) else block.sid
-
-
-class _IndexedPool:
-    """Pool of *inactive* blocks indexed by size.
-
-    Selection and iteration order is identical to a single (size, id)-sorted
-    list — S1 exact match, S2 best-fit, S3 largest-first — but add/remove only
-    touch one per-size bucket (typically a handful of blocks) instead of
-    shifting a pool-wide array, and the byte total is a running counter.
-    Block sizes are chunk multiples, so the number of distinct sizes is small
-    compared to the number of blocks; the `_sizes` index only changes when a
-    bucket is created or emptied.
-
-    ``add_batch``/``remove_batch`` are the bucket-granular entry points used
-    by the stitched paths: one list merge / one filter per touched bucket
-    instead of a bisect + mid-list shift per member.
-
-    Inserts are **lazily settled**: new entries land in a per-size pending
-    run (one list append) and are merged into the sorted bucket only when an
-    *ordered* query actually reaches that size. Byte/count totals update at
-    insert time, so the O(1) S3-vs-S4 decision never waits on a settle, and
-    sizes the candidate walk never descends to are never sorted at all —
-    which is most of them, since the walk stops at coverage. Settling is
-    timing-transparent: every ordered read sees exactly the bucket an eager
-    insert would have produced.
-    """
-
-    __slots__ = ("_buckets", "_pending", "_sizes", "_count", "bytes")
-
-    def __init__(self):
-        self._buckets: Dict[int, List[tuple]] = {}  # size -> [(id, block)] asc
-        self._pending: Dict[int, List[tuple]] = {}  # size -> unsorted inserts
-        self._sizes: List[int] = []  # ascending distinct sizes
-        self._count = 0
-        self.bytes = 0  # running sum of member sizes
-
-    def __len__(self):
-        return self._count
-
-    def __iter__(self):
-        for size in self._sizes:
-            yield from (b for _k, b in self._settled(size))
-
-    def _settled(self, size: int) -> List[tuple]:
-        """The sorted bucket for ``size``, merging any pending run first."""
-        bucket = self._buckets[size]
-        run = self._pending.pop(size, None)
-        if run is not None:
-            bucket.extend(run)
-            bucket.sort()
-        return bucket
-
-    def add(self, block) -> None:
-        size = block.size
-        bucket = self._buckets.get(size)
-        if bucket is None:
-            self._buckets[size] = []
-            insort(self._sizes, size)
-        run = self._pending.get(size)
-        if run is None:
-            run = self._pending[size] = []
-        run.append((_key(block), block))
-        self._count += 1
-        self.bytes += size
-
-    def remove(self, block) -> None:
-        size = block.size
-        bucket = self._settled(size)
-        if len(bucket) == 1:
-            assert bucket[0][1] is block, "pool corruption"
-            del self._buckets[size]
-            self._sizes.pop(bisect_left(self._sizes, size))
-        else:
-            i = bisect_left(bucket, (_key(block),))
-            assert i < len(bucket) and bucket[i][1] is block, "pool corruption"
-            bucket.pop(i)
-        self._count -= 1
-        self.bytes -= size
-
-    def add_batch(self, size: int, entries: List[tuple]) -> None:
-        """Queue ``entries`` [(id, block), ...] for one size bucket: one
-        list-extend now, one sort when (if ever) an ordered query reaches
-        this size."""
-        if self._buckets.get(size) is None:
-            self._buckets[size] = []
-            insort(self._sizes, size)
-        run = self._pending.get(size)
-        if run is None:
-            self._pending[size] = list(entries)
-        else:
-            run.extend(entries)
-        self._count += len(entries)
-        self.bytes += size * len(entries)
-
-    def remove_batch(self, size: int, ids: set) -> None:
-        """Remove the entries with the given ids from one size bucket.
-
-        Removing a few ids from a big bucket bisects them out; removing a
-        large share rebuilds the bucket with one filter pass.
-        """
-        bucket = self._settled(size)
-        k = len(ids)
-        if k == len(bucket):  # ids can only name present entries
-            del self._buckets[size]
-            self._sizes.pop(bisect_left(self._sizes, size))
-        elif k <= 16 and k * 8 < len(bucket):
-            for pid in ids:
-                i = bisect_left(bucket, (pid,))
-                assert bucket[i][0] == pid, "pool corruption"
-                bucket.pop(i)
-        else:
-            kept = [e for e in bucket if e[0] not in ids]
-            assert len(kept) == len(bucket) - k, "pool corruption"
-            self._buckets[size] = kept
-        self._count -= k
-        self.bytes -= size * k
-
-    def exact(self, size: int):
-        if size not in self._buckets:
-            return None
-        return self._settled(size)[0][1]
-
-    def best_fit_at_least(self, size: int):
-        """Smallest block with block.size >= size."""
-        i = bisect_left(self._sizes, size)
-        if i < len(self._sizes):
-            return self._settled(self._sizes[i])[0][1]
-        return None
-
-
-class _PartitionedPool:
-    """Inactive pBlock pool split at the fragmentation limit (paper §4.2.3).
-
-    Blocks >= the limit are legal stitch sources ("main"), blocks below it
-    are not ("sub"). Keeping them in separate indexed pools means the S3/S4
-    candidate scan never even sees sub-limit blocks, and the running
-    ``main.bytes`` total answers "can the pool cover this request at all?"
-    in O(1). A block's
-    partition is a pure function of its size, so exact/best-fit routing stays
-    order-identical to one combined (size, id)-sorted pool.
-    """
-
-    __slots__ = ("frag_limit", "main", "sub")
-
-    def __init__(self, frag_limit: int):
-        self.frag_limit = frag_limit
-        self.main = _IndexedPool()  # size >= frag_limit: stitch sources
-        self.sub = _IndexedPool()  # size < frag_limit: reuse/split only
-
-    def _pool_for(self, size: int) -> _IndexedPool:
-        return self.sub if size < self.frag_limit else self.main
-
-    def __len__(self):
-        return len(self.main) + len(self.sub)
-
-    def __iter__(self):
-        # ascending (size, id): every sub size < frag_limit <= every main size
-        return chain(iter(self.sub), iter(self.main))
-
-    def add(self, block) -> None:
-        self._pool_for(block.size).add(block)
-
-    def remove(self, block) -> None:
-        self._pool_for(block.size).remove(block)
-
-    def exact(self, size: int):
-        return self._pool_for(size).exact(size)
-
-    def best_fit_at_least(self, size: int):
-        if size < self.frag_limit:
-            blk = self.sub.best_fit_at_least(size)
-            if blk is not None:  # any sub hit is smaller than every main block
-                return blk
-        return self.main.best_fit_at_least(size)
-
-    @property
-    def bytes(self) -> int:
-        return self.main.bytes + self.sub.bytes
-
-
-class GMLakeAllocator:
-    """The paper's allocator. Drop-in interchangeable with CachingAllocator.
-
-    Public surface: ``malloc``/``free`` (paper: Alloc + BestFit / Update),
-    ``reserved_bytes``, ``state_counts`` (S1–S5 tallies of Algorithm 1),
-    ``stats`` (AllocatorStats), ``check_invariants`` (debug/test).
-
-    Deferred-free contract: ``free`` of a stitched block is O(1) — it bumps
-    the sBlock's activation generation and queues the block. The structural
-    pool work is applied by ``_reconcile`` *before any pool read* (entry of
-    ``_malloc_vms``, the over-budget branch of a free, and
-    ``check_invariants``), so every BestFit query observes exactly the state
-    an eager implementation would have. Reconciliation timing is therefore
-    unobservable, which is what keeps replay digests bit-identical.
-    """
-
-    name = "gmlake"
-
-    #: The paper quotes 128 MB as an example fragmentation limit (§4.2.3) and
-    #: notes the hyper-parameters are "empirically configured ... through best
-    #: practices" (§5.1). On our workload suite 8 MB is the empirical optimum
-    #: (see EXPERIMENTS.md §Allocator); 128 MB remains available as
-    #: ``chunks.DEFAULT_FRAG_LIMIT``.
-    TUNED_FRAG_LIMIT = 8 * 1024 * 1024
-
-    def __init__(
-        self,
-        device: VMMDevice,
-        frag_limit: int = TUNED_FRAG_LIMIT,
-        sblock_va_budget: Optional[int] = None,
-        record_timeline: bool = False,
-    ):
-        self.device = device
-        self.frag_limit = frag_limit
-        # paper §4.2.3: VA for stitched blocks is capped; LRU StitchFree past it
-        self.sblock_va_budget = (
-            sblock_va_budget if sblock_va_budget is not None else 4 * device.capacity_bytes
-        )
-        self.stats = AllocatorStats(record_timeline=record_timeline)
-        self.state_counts: Dict[str, int] = {f"S{i}": 0 for i in range(1, 6)}
-
-        self._inactive_p = _PartitionedPool(frag_limit)
-        self._inactive_s = _IndexedPool()
-        self._pblocks: Dict[int, PBlock] = {}  # registry of all live pBlocks
-        self._sblocks: Dict[int, SBlock] = {}  # registry of all live sBlocks
-        # StitchFree LRU: lazy-invalidation min-heap of (last_use, sid).
-        # Entries are pushed whenever an sBlock becomes inactive (or its
-        # last_use is refreshed while inactive); stale entries are skipped at
-        # pop time, so eviction is O(evicted * log n) instead of a full sort.
-        # (last_use, sid) matches the seed's stable sort of the append-only
-        # sBlock list: sids are monotone in creation order.
-        self._lru_heap: List[Tuple[int, int]] = []
-        # sBlocks freed since the last reconcile: their generation is already
-        # bumped (members read as inactive) but pools/refcounts are stale.
-        self._pending_frees: List[SBlock] = []
-        self._sblock_va_bytes = 0
-        self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
-        self._tick = 0
-
-        # requests < 2 MB use the classic splitting pool (paper §3.1)
-        self._small = CachingAllocator(device)
-
-    # ------------------------------------------------------------------
-    # accounting
-    # ------------------------------------------------------------------
-    @property
-    def reserved_bytes(self) -> int:
-        """Physical bytes held (VMS chunks + small-pool segments). O(1)."""
-        return self._chunk_bytes + self._small.reserved_bytes
-
-    # ------------------------------------------------------------------
-    # activity transitions
-    # ------------------------------------------------------------------
-    def _activate_p(self, p: PBlock) -> None:
-        """Inactive -> directly active: leave the pool, bump member refcounts.
-
-        Single-block handout (S1 pBlock / S2): O(log bucket + |p.sblocks|).
-        """
-        assert not p.active
-        self._inactive_p.remove(p)
-        p.direct = True
-        inactive_s_remove = self._inactive_s.remove
-        for s in p.sblocks:
-            if s.active_members == 0:
-                inactive_s_remove(s)
-            s.active_members += 1
-
-    def _deactivate_p(self, p: PBlock) -> None:
-        """Directly active -> inactive. The single-block inverse.
-
-        Correct with frees pending: refcount decrements commute with the
-        deferred ones, and a zero-crossing pushed here or at reconcile
-        carries the same (last_use, sid) either way.
-        """
-        assert p.direct
-        p.direct = False
-        self._inactive_p.add(p)
-        heap = self._lru_heap
-        inactive_s_add = self._inactive_s.add
-        for s in p.sblocks:
-            m = s.active_members - 1
-            s.active_members = m
-            assert m >= 0
-            if m == 0:
-                inactive_s_add(s)
-                heappush(heap, (s.last_use, s.sid))
-
-    def _hold_sblock(self, s: SBlock) -> None:
-        """Hand out an existing inactive sBlock (S1): one generation bump,
-        one stamp per member, one bucket filter per member size, one
-        aggregated refcount pass. No per-member pool queries. The same walk
-        rebuilds the block's free plan (see ``SBlock``), which stays exact
-        until the matching free because held members are frozen."""
-        s.gen += 1
-        s.held = True
-        gen = s.gen
-        pools = (self._inactive_p.sub, self._inactive_p.main)
-        limit = self.frag_limit
-        plan: Dict[int, list] = {}
-        member_sets = []
-        for p in s.members():
-            p.holder = s
-            p.holder_gen = gen
-            entries = plan.get(p.size)
-            if entries is None:
-                entries = plan[p.size] = []
-            entries.append((p.pid, p))
-            member_sets.append(p.sblocks)
-        for size, entries in plan.items():
-            pools[size >= limit].remove_batch(size, {e[0] for e in entries})
-        refs = Counter(chain.from_iterable(member_sets))
-        self._apply_activation(refs)  # includes s itself: it leaves the pool
-        s._plan = plan
-        s._refs = refs
-
-    def _apply_activation(self, refs: Counter) -> None:
-        """Apply aggregated +delta membership refcounts (activation side).
-
-        Counts only grow within one batch, so an sBlock leaves the inactive
-        pool iff its count was zero before the batch — identical outcome to
-        incrementing one member at a time.
-        """
-        inactive_s_remove = self._inactive_s.remove
-        for s, d in refs.items():
-            if s.active_members == 0:
-                inactive_s_remove(s)
-            s.active_members += d
-
-    def _reconcile(self) -> None:
-        """Apply all deferred sBlock frees in one batched pass.
-
-        Cost: O(touched buckets + distinct referencing sBlocks) across *all*
-        pending frees — the per-member work was already paid once at handout,
-        when the free plan was recorded — vs. one bucket insort and one
-        refcount walk per member in the eager scheme. Pool contents, byte totals,
-        inactive-sBlock set and LRU entries end up exactly as if each free
-        had been applied eagerly at its own tick (counts only shrink here,
-        so zero-crossings are batch-order independent; heap entries are
-        (last_use, sid) values fixed at free time; bucket merges commute
-        with interleaved single-block frees because buckets are id-sorted).
-        """
-        pending = self._pending_frees
-        if not pending:
-            return
-        self._pending_frees = []
-        pools = (self._inactive_p.sub, self._inactive_p.main)
-        limit = self.frag_limit
-        if len(pending) == 1:  # common case: no cross-free merging needed
-            s = pending[0]
-            by_size, refs = s._plan, s._refs
-            s._plan = s._refs = None
-        else:
-            by_size = {}
-            refs = Counter()
-            for s in pending:
-                for size, entries in s._plan.items():
-                    batch = by_size.get(size)
-                    if batch is None:
-                        by_size[size] = entries  # plans are single-use: own it
-                    else:
-                        batch.extend(entries)
-                refs.update(s._refs)
-                s._plan = s._refs = None
-        for size, entries in by_size.items():
-            pools[size >= limit].add_batch(size, entries)
-        heap = self._lru_heap
-        inactive_s_add = self._inactive_s.add
-        for s, d in refs.items():
-            m = s.active_members - d
-            s.active_members = m
-            assert m >= 0
-            if m == 0:
-                inactive_s_add(s)
-                heappush(heap, (s.last_use, s.sid))
-        # lazy invalidation leaves stale entries behind; when they outnumber
-        # the live ones, rebuild from the inactive set (one valid entry per
-        # inactive sBlock) so heap memory stays O(inactive), not O(frees)
-        if len(heap) > 64 + 4 * len(self._inactive_s):
-            self._compact_lru_heap()
-
-    # ------------------------------------------------------------------
-    # primitive operations: Alloc / Split / Stitch / StitchFree
-    # ------------------------------------------------------------------
-    def _alloc_new(self, size: int) -> PBlock:
-        """Paper's Alloc: the only creator of physical chunks."""
-        chunks = self.device.vmm_alloc(size)
-        p = PBlock(chunks)
-        self._pblocks[p.pid] = p
-        self._chunk_bytes += p.size
-        p.direct = True  # handed out or immediately stitched by the caller
-        return p
-
-    def _split(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
-        """Paper's Split: divide an *inactive* pBlock; re-map both halves.
-
-        sBlocks referencing the old pBlock substitute the two halves inside
-        its slot (chunk coverage identical) — the paper's "new pBlocks
-        replace the predecessor" without invalidating the stitched pattern
-        tape. The position map (materialized on the first substitution into
-        each sBlock) makes this O(1): ``pos`` names the slot, no other slot
-        moves, and the dead pBlock's key is dropped from every referencing
-        map right here.
-        """
-        assert not p.active and 0 < first_size < p.size
-        assert first_size % CHUNK_SIZE == 0
-        k = first_size // CHUNK_SIZE
-        self._inactive_p.remove(p)
-        del self._pblocks[p.pid]
-        a = PBlock(p.chunks[:k])
-        b = PBlock(p.chunks[k:])
-        self._pblocks[a.pid] = a
-        self._pblocks[b.pid] = b
-        # two new VA reservations + remap (charged to the device model)
-        self.device.vmm_map_existing(len(a.chunks))
-        self.device.vmm_map_existing(len(b.chunks))
-        for s in p.sblocks:
-            s.materialize_slots()
-            j = s.pos.pop(p.pid)
-            slot = s.slots[j]
-            i = slot.index(p)  # slots start singleton and stay tiny
-            slot[i : i + 1] = [a, b]
-            s.pos[a.pid] = j
-            s.pos[b.pid] = j
-            s.n_members += 1
-            a.sblocks.add(s)
-            b.sblocks.add(s)
-        p.sblocks.clear()
-        self._inactive_p.add(a)
-        self._inactive_p.add(b)
-        return a, b
-
-    def _stitch(
-        self,
-        pblocks: List[PBlock],
-        total_size: Optional[int] = None,
-        active_members: Optional[int] = None,
-        hold: bool = False,
-        refs: Optional[Counter] = None,
-        plan: Optional[Dict[int, list]] = None,
-    ) -> SBlock:
-        """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create.
-
-        ``hold=True`` marks the new sBlock as the handed-out allocation:
-        every member is stamped with its generation and the take pass's
-        ``refs`` Counter + bucket slices are cached as the free plan
-        (S3/S4). ``hold=False`` is the S2 opportunistic stitch, whose
-        members keep their own state.
-        """
-        if total_size is None:
-            total_size = sum(p.size for p in pblocks)
-        n = total_size // CHUNK_SIZE  # == total member chunk count
-        self.device.vmm_map_existing(n)
-        s = SBlock(
-            pblocks, tick=self._tick, size=total_size,
-            active_members=active_members, hold=hold, refs=refs, plan=plan,
-        )
-        self._sblocks[s.sid] = s
-        self._sblock_va_bytes += s.size
-        if s.active_members == 0:
-            self._inactive_s.add(s)
-            heappush(self._lru_heap, (s.last_use, s.sid))
-        self._maybe_stitch_free()
-        return s
-
-    def _maybe_stitch_free(self) -> None:
-        """Paper's StitchFree: LRU-evict inactive sBlocks past the VA budget.
-
-        O(evicted * (log heap + members)); callers guarantee pending frees
-        are reconciled before eviction runs (so ``active_members`` is exact).
-        """
-        if self._sblock_va_bytes <= self.sblock_va_budget:
-            return
-        heap = self._lru_heap
-        sblocks = self._sblocks
-        while self._sblock_va_bytes > self.sblock_va_budget and heap:
-            last_use, sid = heappop(heap)
-            s = sblocks.get(sid)
-            if s is None or s.active_members > 0 or s.last_use != last_use:
-                continue  # stale entry: destroyed, re-activated, or refreshed
-            self._destroy_sblock(s)
-
-    def _destroy_sblock(self, s: SBlock) -> None:
-        """Unmap and forget an sBlock; eagerly drop every back-reference.
-
-        Only fully-inactive sBlocks are ever destroyed, and an inactive
-        sBlock cannot share a member with a *held* one (the shared member
-        would make it active) — so no held block's cached free plan can
-        reference this block, and the membership drop is a pure discard
-        sweep, run as one C-level map. Stale ``holder`` pointers at this
-        block are left in place: the generation test reads them as inactive
-        forever (the block's gen was bumped at its final free), and each
-        pBlock retains at most one dead holder, so the object graph stays
-        bounded.
-        """
-        if s.active_members == 0:
-            self._inactive_s.remove(s)
-        del self._sblocks[s.sid]
-        self._sblock_va_bytes -= s.size
-        members = s.members()
-        deque(map(set.discard, [p.sblocks for p in members], repeat(s)), maxlen=0)
-        self.device.cu_mem_unmap(s.n_members)
-        self.device.cu_mem_address_free()
-
-    def _compact_lru_heap(self) -> None:
-        heap = [(s.last_use, s.sid) for s in self._inactive_s]
-        heapify(heap)
-        self._lru_heap = heap
-
-    # ------------------------------------------------------------------
-    # BestFit — Algorithm 1
-    # ------------------------------------------------------------------
-    def _best_fit(self, bsize: int, ignore_frag_limit: bool = False):
-        """Classify the request: returns (state, block, available bytes).
-
-        States 1..4 per Algorithm 1. ``block`` is the S1/S2 hit (None for
-        S3/S4 — candidates are taken lazily by ``_take_stitch_candidates``
-        so the walk and the handout are one pass). The S3-vs-S4 decision
-        reads one running byte counter; no block is touched.
-        """
-        # S1: exact match over inactive sBlocks U pBlocks (the only state in
-        # which an sBlock may be assigned).
-        blk = self._inactive_p.exact(bsize)
-        if blk is None:
-            blk = self._inactive_s.exact(bsize)
-        if blk is not None:
-            return 1, blk, bsize
-
-        # S2: single best-fit pBlock >= bsize.
-        single = self._inactive_p.best_fit_at_least(bsize)
-        if single is not None:
-            return 2, single, single.size
-
-        # S3/S4: decided by the running byte totals alone. Blocks below the
-        # frag limit are not stitch sources (paper §4.2.3), which the
-        # partitioned pool encodes structurally.
-        avail = (
-            self._inactive_p.bytes if ignore_frag_limit else self._inactive_p.main.bytes
-        )
-        return (3 if avail >= bsize else 4), None, avail
-
-    def _take_stitch_candidates(
-        self, bsize: int, include_sub: bool
-    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
-        """Remove and return the S3 candidate set, largest blocks first.
-
-        Walks pool buckets largest-size-first. A bucket consumed whole never
-        needs sorting at all (blocks of one size are interchangeable for
-        everything the digests pin — only the intra-stitch chunk layout
-        differs, which nothing downstream reads); the completing bucket
-        selects its k highest ids with one ``nlargest`` pass and leaves the
-        remainder as an unsorted pending run. Candidate *selection* — the
-        chosen id set and the identity of the block that gets split — is
-        exactly the id-ordered scheme's. Membership refcount deltas are
-        aggregated into one Counter pass. The Counter and the removed
-        bucket slices double as the eventual free plan (returned so
-        ``_stitch`` can cache them on the new sBlock — the pool
-        re-insertion at free reuses these very lists). The completing block
-        is split first when it would overshoot (and is at/above the frag
-        limit), exactly as the per-candidate scheme did.
-        """
-        main = self._inactive_p.main
-        pools = (main, self._inactive_p.sub) if include_sub else (main,)
-        cb: List[PBlock] = []
-        segments: List[list] = []  # taken bucket slices, walk order
-        plan: Dict[int, list] = {}
-        total = 0
-        split_last: Optional[PBlock] = None
-        keep = 0
-        done = False
-        for pool in pools:
-            sizes = pool._sizes
-            buckets = pool._buckets
-            pending = pool._pending
-            for si in range(len(sizes) - 1, -1, -1):
-                size = sizes[si]
-                bucket = buckets[size]
-                run = pending.pop(size, None)
-                n = len(bucket) + (len(run) if run is not None else 0)
-                k = -(-(bsize - total) // size)  # blocks of `size` still needed
-                if k > n:  # take the whole bucket: no order needed
-                    if run is not None:
-                        bucket.extend(run)
-                    del buckets[size]
-                    sizes.pop(si)
-                    plan[size] = bucket  # the take owns the slice: reuse it
-                    segments.append(bucket)
-                    pool._count -= n
-                    pool.bytes -= size * n
-                    total += size * n
-                    continue
-                # This bucket completes the request: its k highest ids win.
-                # The winners can only be the sorted base's last k entries or
-                # pending inserts, so selection is O(k + |run|) — the bucket
-                # body is never scanned or sorted.
-                cand = bucket[-k:] + run if run is not None else bucket[-k:]
-                del bucket[-k:]
-                if run is not None:
-                    cand.sort()
-                top = cand[-k:]  # ascending; top[0] is the lowest winner
-                rest = cand[:-k]  # candidate-window losers: back to pending
-                overshoot = total + size * k - bsize
-                if overshoot and size >= self.frag_limit:
-                    # the completing block — the lowest winner — is split to
-                    # fit. It stays pooled: _split removes it and re-adds
-                    # the halves itself.
-                    split_last = top[0][1]
-                    rest.append(top[0])
-                    taken = top[1:]
-                    k -= 1
-                    keep = size - overshoot
-                    total = bsize - keep
-                else:
-                    taken = top
-                    total += size * k
-                if rest:
-                    pending[size] = rest  # unsorted; settled on next query
-                elif not bucket:
-                    del buckets[size]
-                    sizes.pop(si)
-                if k:
-                    plan[size] = taken
-                    segments.append(taken)
-                pool._count -= k
-                pool.bytes -= size * k
-                done = True
-                break
-            if done:
-                break
-        else:
-            raise AssertionError("pool byte counter out of sync with contents")
-        for seg in segments:
-            cb += [e[1] for e in seg]
-        if split_last is not None:
-            a, _b = self._split(split_last, keep)
-            self._inactive_p.remove(a)
-            cb.append(a)
-            entries = plan.get(a.size)
-            if entries is None:
-                plan[a.size] = [(a.pid, a)]
-            else:
-                entries.append((a.pid, a))
-            total += keep
-        refs = Counter(chain.from_iterable(map(_get_sblocks, cb)))
-        self._apply_activation(refs)
-        return cb, total, refs, plan
-
-    def _take_all(
-        self, include_sub: bool
-    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
-        """Drain the stitchable pool(s) for S4, largest blocks first."""
-        main = self._inactive_p.main
-        pools = (main, self._inactive_p.sub) if include_sub else (main,)
-        cb: List[PBlock] = []
-        plan: Dict[int, list] = {}
-        total = 0
-        for pool in pools:
-            for size in reversed(pool._sizes):
-                bucket = pool._settled(size)
-                cb += [e[1] for e in reversed(bucket)]
-                total += size * len(bucket)
-                plan[size] = bucket  # main/sub sizes are disjoint partitions
-            pool._buckets = {}
-            pool._pending.clear()
-            pool._sizes.clear()
-            pool._count = 0
-            pool.bytes = 0
-        refs = Counter(chain.from_iterable(map(_get_sblocks, cb)))
-        self._apply_activation(refs)
-        return cb, total, refs, plan
-
-    # ------------------------------------------------------------------
-    # allocation strategy (paper Fig. 9)
-    # ------------------------------------------------------------------
-    def malloc(self, size: int) -> Allocation:
-        """Allocate ``size`` bytes (paper Fig. 9 / Algorithm 1).
-
-        Requests under 2 MB go to the embedded splitting pool; everything
-        else is chunk-rounded and served by BestFit. Raises ``AllocatorOOM``
-        (state S5) only when the device truly cannot cover the request.
-        """
-        if size < SMALL_ALLOC_LIMIT:
-            alloc = self._small.malloc(size)
-            alloc.owner = self
-            self.stats.on_alloc(alloc.block_size, self.reserved_bytes)
-            return alloc
-
-        self._tick += 1
-        if self._pending_frees:
-            self._reconcile()
-        bsize = round_up(size, CHUNK_SIZE)
-        try:
-            block = self._malloc_vms(bsize)
-        except DeviceOOM as e:
-            self.state_counts["S5"] += 1
-            raise AllocatorOOM(
-                f"GMLake OOM for {size} bytes (reserved={self.reserved_bytes}, "
-                f"active={self.stats.active_bytes}, device_free={self.device.free_bytes})"
-            ) from e
-        if isinstance(block, SBlock):
-            block.last_use = self._tick
-        self.stats.on_alloc(block.size, self.reserved_bytes)
-        return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
-
-    def _malloc_vms(self, bsize: int):
-        state, blk, avail = self._best_fit(bsize)
-        include_sub = False
-        if state == 4:
-            # If a fresh Alloc would not fit, first retry using every inactive
-            # byte (ignore the frag limit), then drop cached small segments.
-            if bsize - avail > self.device.free_bytes:
-                state, blk, avail = self._best_fit(bsize, ignore_frag_limit=True)
-                include_sub = True
-                if state == 4:
-                    # O(1) early-out: nothing cached means nothing to release
-                    if (
-                        bsize - avail > self.device.free_bytes
-                        and self._small.cached_free_bytes()
-                    ):
-                        self._small.release_cached()
-        self.state_counts[f"S{state}"] += 1
-
-        if state == 1:
-            if isinstance(blk, PBlock):
-                self._activate_p(blk)
-            else:
-                self._hold_sblock(blk)
-            return blk
-
-        if state == 2:
-            p = blk
-            # paper §4.2.3: blocks below the frag limit are not split
-            if p.size == bsize or p.size < self.frag_limit:
-                self._activate_p(p)
-                return p
-            a, b = self._split(p, bsize)
-            self._activate_p(a)
-            # opportunistic stitch of the two halves preserves the original
-            # size in the pattern tape (paper Fig. 9 state S2)
-            self._stitch([a, b], total_size=p.size, active_members=1)
-            return a
-
-        if state == 3:
-            cb, total, refs, plan = self._take_stitch_candidates(bsize, include_sub)
-            if len(cb) == 1:  # degenerate after split: a plain pBlock handout
-                cb[0].direct = True
-                return cb[0]
-            return self._stitch(
-                cb, total_size=total, active_members=len(cb),
-                hold=True, refs=refs, plan=plan,
-            )
-
-        # state == 4: insufficient inactive blocks -> Alloc new physical memory
-        new_p = self._alloc_new(bsize - avail)  # raises DeviceOOM -> S5 upstream
-        if avail == 0:
-            return new_p
-        cb, total, refs, plan = self._take_all(include_sub)
-        assert total == avail, "pool byte counter out of sync with contents"
-        new_p.direct = False  # joins the stitch as a generation-stamped member
-        entries = plan.get(new_p.size)
-        if entries is None:
-            plan[new_p.size] = [(new_p.pid, new_p)]
-        else:
-            entries.append((new_p.pid, new_p))
-        return self._stitch(
-            cb + [new_p],
-            total_size=total + new_p.size,
-            active_members=len(cb) + 1,
-            hold=True,
-            refs=refs,
-            plan=plan,
-        )
-
-    # ------------------------------------------------------------------
-    # deallocation: Update (no physical free)
-    # ------------------------------------------------------------------
-    def free(self, alloc: Allocation) -> None:
-        """Paper's Update: flip state only, keep physical memory.
-
-        pBlock frees apply eagerly (one block). sBlock frees are O(1): bump
-        the activation generation — all member stamps go stale at once — and
-        queue the block for the next batched reconcile. StitchFree still
-        runs here when the VA budget is exceeded (reconciling first, so the
-        eviction scan sees exact refcounts).
-        """
-        block = alloc.block
-        if isinstance(block, PBlock):
-            self._deactivate_p(block)
-            if len(self._lru_heap) > 64 + 4 * len(self._inactive_s):
-                self._compact_lru_heap()
-        elif isinstance(block, SBlock):
-            assert block.held, "double free of stitched block"
-            # refresh last_use first so the LRU entry pushed at reconcile
-            # already carries the post-free tick
-            block.last_use = self._tick
-            block.gen += 1
-            block.held = False
-            self._pending_frees.append(block)
-            if self._sblock_va_bytes > self.sblock_va_budget:
-                self._reconcile()  # budget may be enforceable only now
-                self._maybe_stitch_free()
-        else:  # small-pool block
-            self._small.free(alloc)
-            self.stats.on_free(alloc.block_size, self.reserved_bytes)
-            return
-        self.stats.on_free(alloc.block_size, self.reserved_bytes)
-
-    # ------------------------------------------------------------------
-    # debug / test support
-    # ------------------------------------------------------------------
-    def check_invariants(self) -> None:
-        """Validate every structural invariant (test/debug only; O(blocks)).
-
-        Reconciles pending frees first — reconciliation timing is
-        unobservable to callers, so this never perturbs replay behaviour.
-        The invariants below are the ones the golden-digest tests pin:
-        pools hold exactly the inactive blocks, refcounts and byte totals
-        match ground truth recomputed from members, position maps agree
-        with slot contents, and every inactive sBlock is LRU-reachable.
-        """
-        self._reconcile()
-        seen_chunks: Dict[int, int] = {}
-        inactive_ids = {p.pid for p in self._inactive_p}
-        for p in self._pblocks.values():
-            for c in p.chunks:
-                assert c not in seen_chunks, f"chunk {c} owned by two pBlocks"
-                seen_chunks[c] = p.pid
-            # active blocks are never pooled; inactive blocks always are
-            assert (p.pid in inactive_ids) == (not p.active)
-        inactive_s_ids = {s.sid for s in self._inactive_s}
-        lru_entries = set(self._lru_heap)
-        for s in self._sblocks.values():
-            members = s.members()
-            assert s.size == sum(p.size for p in members)
-            assert s.n_members == len(members)
-            if s.slots is not None:  # materialized by a split substitution
-                assert s.pos == {
-                    p.pid: j for j, slot in enumerate(s.slots) for p in slot
-                }
-            assert s.active_members == sum(1 for p in members if p.active)
-            assert s.active == (s.active_members > 0)
-            if s.held:  # held: every member stamped with the current gen
-                assert all(
-                    p.holder is s and p.holder_gen == s.gen for p in members
-                )
-            assert (s.sid in inactive_s_ids) == (not s.active)
-            if not s.active:  # every inactive sBlock is reachable by StitchFree
-                assert (s.last_use, s.sid) in lru_entries
-            for p in members:
-                assert s in p.sblocks
-                assert p.pid in self._pblocks
-        assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
-        assert self._sblock_va_bytes == sum(s.size for s in self._sblocks.values())
-        # partition routing + running byte counters
-        for pool, below in ((self._inactive_p.sub, True), (self._inactive_p.main, False)):
-            assert pool.bytes == sum(p.size for p in pool)
-            assert len(pool) == sum(1 for _ in pool)
-            for p in pool:
-                assert (p.size < self.frag_limit) == below
-        assert self._inactive_s.bytes == sum(s.size for s in self._inactive_s)
+sys.modules[__name__] = _impl

@@ -22,10 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..alloc.caching_allocator import Allocation
+from ..alloc.chunks import CHUNK_SIZE
 from ..kernels import ops
 from .arena import Arena, ArenaConfig
-from .caching_allocator import Allocation
-from .chunks import CHUNK_SIZE
 from .trace import TraceRecorder
 
 
@@ -66,7 +66,16 @@ class _SeqState:
 
 
 class StitchedKVCache:
-    def __init__(self, config: KVCacheConfig, recorder: Optional[TraceRecorder] = None):
+    def __init__(
+        self,
+        config: KVCacheConfig,
+        recorder: Optional[TraceRecorder] = None,
+        allocator=None,
+    ):
+        """``allocator``: any ``repro.alloc`` registry key or backend
+        instance, forwarded to the ``Arena`` (default gmlake). Device-side
+        access paths need an extent-carrying (stitching) backend; pure
+        accounting runs work with any."""
         self.config = config
         self.arena = Arena(
             ArenaConfig(
@@ -75,6 +84,7 @@ class StitchedKVCache:
                 interpret=config.interpret,
                 use_reference_ops=config.use_reference_ops,
             ),
+            allocator=allocator,
             recorder=recorder,
         )
         self.seqs: Dict[int, _SeqState] = {}
@@ -124,6 +134,7 @@ class StitchedKVCache:
     # device-side access
     # ------------------------------------------------------------------
     def _extent_chunks(self, seq_id: int, layer: int, kv: str) -> List[int]:
+        self.arena.require_stitching()
         out: List[int] = []
         for a in self.seqs[seq_id].allocs[(layer, kv)]:
             for e in a.block.extents:

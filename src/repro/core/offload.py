@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..alloc.caching_allocator import Allocation
 from .arena import Arena, ArenaConfig
-from .caching_allocator import Allocation
 from .trace import TraceRecorder
 
 

@@ -33,9 +33,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .caching_allocator import AllocatorOOM
-from .chunks import GB, MB, VMMDevice
-from .metrics import ReplayResult
+from ..alloc import registry as _registry
+from ..alloc.caching_allocator import AllocatorOOM
+from ..alloc.chunks import GB, MB, VMMDevice
+from ..alloc.metrics import ReplayResult
 
 BF16 = 2
 FP32 = 4
@@ -440,6 +441,29 @@ def inference_trace(
 # ---------------------------------------------------------------------------
 
 
+def _resolve_allocator(
+    allocator,
+    trace=None,
+    capacity_bytes: int = 80 * GB,
+    record_timeline: bool = False,
+    **alloc_kwargs,
+):
+    """Backend instance from a registry key or a protocol instance.
+
+    This is what makes every replay entry point backend-generic: strings
+    construct a fresh backend over a fresh device, instances pass through.
+    Backends that plan from a profiled trace (``capabilities.planning`` /
+    ``needs_prepare``) get their ``prepare(trace)`` pass here — outside
+    the timed replay loop, matching their offline-profiling deployment.
+    """
+    allocator = _registry.resolve(
+        allocator, lambda: VMMDevice(capacity_bytes), record_timeline, **alloc_kwargs
+    )
+    if trace is not None and getattr(allocator, "needs_prepare", False):
+        allocator.prepare(trace)
+    return allocator
+
+
 def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
     return ReplayResult(
         name=allocator.name,
@@ -457,8 +481,16 @@ def replay(
     allocator,
     stop_on_oom: bool = True,
     check_invariants_every: int = 0,
+    capacity_bytes: int = 80 * GB,
 ) -> ReplayResult:
     """Feed a trace through an allocator; returns metrics + cost + wall time.
+
+    ``allocator`` is either a backend instance or a registry key
+    (``"caching"``, ``"gmlake"``, ``"stalloc"``, ... — see
+    ``repro.alloc.registry``); keys construct a fresh backend over a fresh
+    ``VMMDevice(capacity_bytes)``. Planning backends are prepared on this
+    trace before the loop starts, so profiling never pollutes
+    ``wall_seconds``.
 
     The per-event loop is the measured host hot path (``wall_seconds``): the
     allocator methods are pre-bound, the OOM try/except wraps whole loop runs
@@ -471,6 +503,7 @@ def replay(
     tests pin by replaying at several cadences (see
     ``tests/test_golden_equivalence.py::test_reconcile_timing_is_unobservable``).
     """
+    allocator = _resolve_allocator(allocator, trace, capacity_bytes)
     live: Dict[int, object] = {}
     oom = False
     oom_at = None
@@ -532,16 +565,19 @@ def replay_batched(
     allocator,
     stop_on_oom: bool = True,
     batch_size: int = 8192,
+    capacity_bytes: int = 80 * GB,
 ) -> ReplayResult:
     """Replay over the pre-compiled event arrays in fixed-size batches.
 
-    Semantically identical to ``replay`` (same ReplayResult, same marks); the
-    win is mechanical: ``Trace.compiled()`` amortizes event decoding across
-    replays, integer opcodes replace string compares, and the exception scope
-    is one batch rather than one event. Stats stay exact — ``AllocatorStats``
-    binds its no-timeline fast path at construction when ``record_timeline``
-    is off, which is what makes the per-event accounting cheap enough here.
+    Semantically identical to ``replay`` (same ReplayResult, same marks,
+    same registry-key-or-instance ``allocator``); the win is mechanical:
+    ``Trace.compiled()`` amortizes event decoding across replays, integer
+    opcodes replace string compares, and the exception scope is one batch
+    rather than one event. Stats stay exact — ``AllocatorStats`` binds its
+    no-timeline fast path at construction when ``record_timeline`` is off,
+    which is what makes the per-event accounting cheap enough here.
     """
+    allocator = _resolve_allocator(allocator, trace, capacity_bytes)
     ops, tids, sizes, labels = trace.compiled()
     live: Dict[int, object] = {}
     oom = False
@@ -584,21 +620,18 @@ def replay_batched(
 
 def run_workload(
     trace: Trace,
-    allocator_name: str,
+    allocator,
     capacity_bytes: int = 80 * GB,
     record_timeline: bool = False,
     **alloc_kwargs,
 ) -> ReplayResult:
-    """Convenience: fresh device + allocator, replay, return result."""
-    from .gmlake import GMLakeAllocator
-    from .caching_allocator import CachingAllocator, NativeAllocator
+    """Convenience: fresh device + backend, replay, return result.
 
-    device = VMMDevice(capacity_bytes)
-    cls = {
-        "gmlake": GMLakeAllocator,
-        "caching": CachingAllocator,
-        "native": NativeAllocator,
-    }[allocator_name]
-    allocator = cls(device, record_timeline=record_timeline, **alloc_kwargs)
+    ``allocator`` is any registered backend key (``repro.alloc.registry``)
+    or an already-constructed protocol instance.
+    """
+    allocator = _resolve_allocator(
+        allocator, trace, capacity_bytes, record_timeline, **alloc_kwargs
+    )
     result, _ = replay(trace, allocator)
     return result

@@ -42,6 +42,8 @@ class EngineConfig:
     n_chunks: int = 512
     interpret: bool = False
     use_reference_ops: bool = True  # CPU-friendly default
+    #: KV-arena backend: any ``repro.alloc`` registry key (or instance)
+    allocator: object = "gmlake"
 
 
 class ServeEngine:
@@ -69,6 +71,7 @@ class ServeEngine:
                 use_reference_ops=engine_cfg.use_reference_ops,
             ),
             recorder=self.recorder,
+            allocator=engine_cfg.allocator,
         )
         self._next_id = itertools.count()
         self.waiting: List[Request] = []
@@ -164,12 +167,14 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def memory_report(self) -> Dict[str, Any]:
         alloc = self.kv.arena.allocator
+        counts = getattr(alloc, "state_counts", None)  # gmlake-style backends
         return {
+            "allocator": alloc.name,
             "reserved_bytes": alloc.reserved_bytes,
             "active_bytes": alloc.stats.active_bytes,
             "peak_reserved": alloc.stats.peak_reserved,
             "peak_active": alloc.stats.peak_active,
             "utilization": alloc.stats.utilization,
-            "state_counts": dict(alloc.state_counts),
+            "state_counts": dict(counts) if counts is not None else None,
             "n_trace_events": len(self.recorder.trace),
         }

@@ -1,0 +1,214 @@
+"""Protocol-conformance suite: every registered backend, one contract.
+
+The golden tests pin each backend's *policy* on fixed traces; this file
+pins the *protocol* — the behavioural contract ``AllocatorProtocol``
+promises to every consumer (replay loop, arena, serving engine):
+
+  * malloc returns an ``Allocation`` covering the request; stats track it
+  * free accepts exactly what malloc produced; active returns to zero
+  * an impossible request raises ``AllocatorOOM`` (never returns junk),
+    and the allocator remains usable afterwards
+  * reserved_bytes / release_cached / check_invariants behave per the
+    declared capabilities
+
+Parametrized over ``registry.names()``: registering a backend that breaks
+the contract fails here before any consumer sees it.
+"""
+
+import pytest
+
+from repro.alloc import (
+    GB,
+    MB,
+    Allocation,
+    AllocatorOOM,
+    AllocatorProtocol,
+    VMMDevice,
+    registry,
+)
+from repro.core import PAPER_MODELS, replay, training_trace
+
+BACKENDS = registry.names()
+
+
+def make(name: str, capacity=4 * GB, **kw):
+    return registry.create(name, VMMDevice(capacity), **kw)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_satisfies_protocol(name):
+    a = make(name)
+    assert isinstance(a, AllocatorProtocol)
+    assert a.name == name
+    caps = registry.capabilities(name)
+    assert caps is registry.capabilities(a) is type(a).capabilities
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_alloc_free_contract(name):
+    a = make(name)
+    allocs = [a.malloc(sz) for sz in (64 * MB, 3 * MB, 1000, 17 * MB)]
+    for alloc, sz in zip(allocs, (64 * MB, 3 * MB, 1000, 17 * MB)):
+        assert isinstance(alloc, Allocation)
+        assert alloc.req_size == sz
+        assert alloc.block_size >= sz  # the block covers the request
+    assert a.stats.n_alloc == 4
+    assert a.stats.active_bytes > 0
+    assert a.stats.active_bytes <= a.reserved_bytes
+    for alloc in allocs:
+        a.free(alloc)
+    assert a.stats.n_free == 4
+    assert a.stats.active_bytes == 0
+    assert a.stats.peak_active >= 64 * MB
+    a.check_invariants()
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_caching_capability_matches_behaviour(name):
+    """caching backends keep freed memory reserved; non-caching return it."""
+    a = make(name)
+    x = a.malloc(64 * MB)
+    a.free(x)
+    if registry.capabilities(name).caching:
+        assert a.reserved_bytes > 0
+    else:
+        assert a.reserved_bytes == 0
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_oom_raises_and_allocator_survives(name):
+    a = make(name, capacity=64 * MB)
+    with pytest.raises(AllocatorOOM):
+        a.malloc(1 * GB)
+    # the failed request must not leak accounting...
+    assert a.stats.active_bytes == 0
+    a.check_invariants()
+    # ...and the allocator must still serve requests that do fit
+    y = a.malloc(4 * MB)
+    assert y.block_size >= 4 * MB
+    a.free(y)
+    assert a.stats.active_bytes == 0
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_release_cached_contract(name):
+    a = make(name)
+    x = a.malloc(32 * MB)
+    small = a.malloc(1000)  # lands in a splitting pool where one exists
+    a.free(x)
+    a.free(small)
+    reserved_before = a.reserved_bytes
+    freed = a.release_cached()
+    assert isinstance(freed, int) and freed >= 0
+    assert a.reserved_bytes == reserved_before - freed
+    if not registry.capabilities(name).releases_cached:
+        assert freed == 0
+    a.check_invariants()
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_replayable_end_to_end(name):
+    """Registry key -> replay of a real synthetic trace, no OOM, sane stats.
+
+    This is the acceptance-criterion path: ``replay(trace, "<backend>")``
+    must run traces end-to-end for every registered backend.
+    """
+    tr = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=2
+    )
+    res, _marks = replay(tr, name)
+    assert not res.oom
+    assert res.name == name
+    assert res.stats.n_alloc == tr.n_allocs
+    assert 0 < res.stats.peak_active <= res.stats.peak_reserved
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_planning_backends_prepare_and_hit(name):
+    """planning capability <-> needs_prepare/prepare; plans actually hit."""
+    caps = registry.capabilities(name)
+    a = make(name)
+    if not caps.planning:
+        assert not getattr(a, "needs_prepare", False)
+        return
+    assert a.needs_prepare
+    tr = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=2
+    )
+    plan = a.prepare(tr)
+    assert not a.needs_prepare
+    assert plan.capacity > 0
+    # replaying the profiled trace through the prepared instance: every
+    # request is served from the plan, and the arena reservation is exact
+    res, _ = replay(tr, a)
+    assert a.fallback_allocs == 0
+    assert a.planned_allocs == tr.n_allocs
+    assert res.stats.peak_reserved == plan.capacity
+
+
+def test_unknown_backend_is_a_loud_error():
+    with pytest.raises(KeyError, match="registered:"):
+        registry.get("nonexistent")
+    with pytest.raises(KeyError, match="registered:"):
+        registry.create("nonexistent", VMMDevice(1 * GB))
+
+
+def test_resolve_rejects_options_with_an_instance():
+    """Options alongside an already-built instance are an error, never
+    silently dropped."""
+    a = make("caching")
+    assert registry.resolve(a, lambda: None) is a
+    with pytest.raises(ValueError, match="record_timeline"):
+        registry.resolve(a, lambda: None, record_timeline=True)
+    with pytest.raises(ValueError, match="frag_limit"):
+        registry.resolve(a, lambda: None, frag_limit=8)
+
+
+def test_stalloc_planned_double_free_is_detected():
+    from repro.core import PAPER_MODELS, training_trace
+
+    a = make("stalloc", capacity=16 * GB)
+    tr = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=1
+    )
+    a.prepare(tr)
+    x = a.malloc(64 * MB)
+    a.free(x)
+    with pytest.raises(AssertionError, match="double free"):
+        a.free(x)
+
+
+def test_stalloc_refuses_replanning_a_used_instance():
+    """One instance, one plan: re-preparing after placements were handed
+    out would desynchronise cursor/reservation/plan."""
+    from repro.core import PAPER_MODELS, training_trace
+
+    a = make("stalloc", capacity=16 * GB)
+    tr = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=1
+    )
+    plan = a.prepare(tr)
+    a.prepare(tr)  # unused instance: replanning is harmless
+    x = a.malloc(plan.sizes[0])  # a planned hit: reserves + advances cursor
+    assert a.planned_allocs == 1
+    with pytest.raises(RuntimeError, match="fresh backend"):
+        a.prepare(tr)
+    a.free(x)
+
+
+def test_arena_data_paths_require_stitching_capability():
+    """Accounting works with any backend; device data paths fail loudly
+    (not with an opaque AttributeError) for non-stitching backends."""
+    from repro.core.arena import Arena, ArenaConfig
+
+    # 16 chunks = 32 MB: room for the caching backend's 20 MB large segment
+    arena = Arena(ArenaConfig(n_chunks=16, use_reference_ops=True), allocator="caching")
+    alloc = arena.alloc_elems(1024)  # accounting path: fine
+    with pytest.raises(TypeError, match="stitching backend"):
+        arena.chunk_map(alloc)
+    arena.free(alloc)
+
+    arena_g = Arena(ArenaConfig(n_chunks=8, use_reference_ops=True))
+    alloc_g = arena_g.alloc_elems(1024)
+    assert arena_g.chunk_map(alloc_g).shape[0] >= 1  # gmlake: extents flow
+    arena_g.free(alloc_g)

@@ -109,7 +109,7 @@ def test_compressed_psum_error_feedback():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.utils.compat import shard_map
         from repro.parallel.collectives import compressed_psum
         mesh = jax.make_mesh((8,), ("data",))
 
@@ -140,7 +140,7 @@ def test_overlapped_all_gather_matches_dense():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.utils.compat import shard_map
         from repro.parallel.collectives import overlapped_all_gather, ring_layer_matmul
         mesh = jax.make_mesh((8,), ("data",))
         w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))

@@ -1,15 +1,29 @@
-"""Golden-digest equivalence tests for the allocator hot-path rewrite.
+"""Golden-digest equivalence tests, parametrized over the backend registry.
 
-The indexed-pool / LRU-heap / cached-extent rewrite of the allocator core is
-a pure mechanical-sympathy optimization: for any trace it must produce the
-exact S1-S5 state counts, peak active/reserved bytes, and OOM points of the
-original (seed) implementation. The values below were recorded by replaying
-these fixed-seed traces through the seed implementation (commit 97c6e93);
-any drift here means the data-structure rewrite changed allocation policy.
+Two jobs:
+
+1. The indexed-pool / LRU-heap / cached-extent / compact-sid-array rewrites
+   of the gmlake and caching cores are pure mechanical-sympathy
+   optimizations: for any trace they must produce the exact S1-S5 state
+   counts, peak active/reserved bytes, and OOM points of the original
+   (seed) implementation. Those digests were recorded by replaying the
+   fixed-seed traces through the seed implementation (commit 97c6e93); any
+   drift means a data-structure rewrite changed allocation policy.
+
+2. Every backend in ``repro.alloc.registry`` must have pinned digests here
+   (``test_registry_is_fully_pinned`` enforces it), so registering a new
+   allocator forces recording its behaviour on the shared trace suite.
+   The native and stalloc digests were recorded when each backend landed
+   (stalloc: PR 3, this file).
+
+The parametrization resolves backends through the registry-key replay path
+(``replay(trace, "name", capacity_bytes=...)``), so string resolution,
+device construction, and planning-backend ``prepare`` are covered too.
 """
 
 import pytest
 
+from repro.alloc import registry
 from repro.core import (
     GB,
     PAPER_MODELS,
@@ -19,11 +33,10 @@ from repro.core import (
     replay_batched,
     training_trace,
 )
-from repro.core.caching_allocator import CachingAllocator
 from repro.core.gmlake import GMLakeAllocator
 
-# (trace key, allocator, capacity GB) -> digest recorded on the seed
-# implementation. state_counts is None for the caching allocator.
+# (trace key, allocator backend, capacity GB) -> pinned digest.
+# state_counts is None for backends without Algorithm-1 state tracking.
 GOLDEN = {
     ("train_opt13b_LRO", "caching", 80): dict(
         state_counts=None, peak_active=20049543168, peak_reserved=29087498240,
@@ -73,9 +86,57 @@ GOLDEN = {
         peak_active=15980298240, peak_reserved=15980298240,
         oom=True, oom_at_event=7, n_alloc=7, n_free=0,
     ),
+    # -- native: reserved == active by construction (no pooling) ----------
+    ("train_opt13b_LRO", "native", 80): dict(
+        state_counts=None, peak_active=20028047360, peak_reserved=20028047360,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
+    ),
+    ("train_opt1.3b_LR", "native", 80): dict(
+        state_counts=None, peak_active=7302905856, peak_reserved=7302905856,
+        oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
+    ),
+    ("serve_vicuna", "native", 80): dict(
+        state_counts=None, peak_active=24018124800, peak_reserved=24018124800,
+        oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
+    ),
+    ("serve_vicuna", "native", 16): dict(
+        state_counts=None, peak_active=15973580800, peak_reserved=15973580800,
+        oom=True, oom_at_event=7, n_alloc=7, n_free=0,
+    ),
+    # -- stalloc: planned peak beats caching on every trace; reserved is
+    # the plan's single upfront arena (paper §5.1 fragmentation framing:
+    # train 7.4% / 3.9% / serve 14.9% vs caching's 31 / 34 / 63%) --------
+    ("train_opt13b_LRO", "stalloc", 80): dict(
+        state_counts=None, peak_active=20028047360, peak_reserved=21632368640,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
+    ),
+    # 20 GB device: the 21.6 GB plan cannot be reserved at all — the
+    # planner fails fast at the first planned request (contrast: caching
+    # strands its way to an OOM at event 12746, gmlake completes)
+    ("train_opt13b_LRO", "stalloc", 20): dict(
+        state_counts=None, peak_active=0, peak_reserved=0,
+        oom=True, oom_at_event=0, n_alloc=0, n_free=0,
+    ),
+    ("train_opt1.3b_LR", "stalloc", 80): dict(
+        state_counts=None, peak_active=7302905856, peak_reserved=7600701440,
+        oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
+    ),
+    ("serve_vicuna", "stalloc", 80): dict(
+        state_counts=None, peak_active=24018124800, peak_reserved=28214067200,
+        oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
+    ),
+    ("serve_vicuna", "stalloc", 16): dict(
+        state_counts=None, peak_active=0, peak_reserved=0,
+        oom=True, oom_at_event=0, n_alloc=0, n_free=0,
+    ),
 }
 
-_ALLOCATORS = {"caching": CachingAllocator, "gmlake": GMLakeAllocator}
+def test_registry_is_fully_pinned():
+    """Every registered backend must have golden digests on this suite —
+    a new backend registration without pinned behaviour fails here."""
+    pinned = {case[1] for case in GOLDEN}
+    missing = set(registry.names()) - pinned
+    assert not missing, f"backends with no golden digests: {sorted(missing)}"
 
 
 def _trace(key):
@@ -114,8 +175,7 @@ def traces():
 @pytest.mark.parametrize("case", sorted(GOLDEN, key=str))
 def test_matches_seed_implementation(case, traces):
     trace_key, alloc_name, cap_gb = case
-    allocator = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
-    res, _ = replay(traces[trace_key], allocator)
+    res, _ = replay(traces[trace_key], alloc_name, capacity_bytes=cap_gb * GB)
     assert _digest(res) == GOLDEN[case]
 
 
@@ -123,21 +183,20 @@ def test_matches_seed_implementation(case, traces):
 def test_batched_replay_matches_seed(case, traces):
     """replay_batched is a drop-in: identical digests AND identical marks."""
     trace_key, alloc_name, cap_gb = case
-    allocator = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
-    res, marks = replay_batched(traces[trace_key], allocator)
+    res, marks = replay_batched(
+        traces[trace_key], alloc_name, capacity_bytes=cap_gb * GB
+    )
     assert _digest(res) == GOLDEN[case]
 
-    reference = _ALLOCATORS[alloc_name](VMMDevice(cap_gb * GB))
-    _, ref_marks = replay(traces[trace_key], reference)
+    _, ref_marks = replay(traces[trace_key], alloc_name, capacity_bytes=cap_gb * GB)
     assert marks == ref_marks
 
 
 def test_invariants_hold_throughout_golden_traces(traces):
-    """Sampled invariant checks over the training golden trace (both cores)."""
-    for name, cls in _ALLOCATORS.items():
-        allocator = cls(VMMDevice(80 * GB))
+    """Sampled invariant checks over the training golden trace, every backend."""
+    for name in registry.names():
         res, _ = replay(
-            traces["train_opt1.3b_LR"], allocator, check_invariants_every=97
+            traces["train_opt1.3b_LR"], name, check_invariants_every=97
         )
         assert not res.oom, name
 
