@@ -28,6 +28,7 @@ PR can state its before/after events/sec without re-checking out the seed.
 from __future__ import annotations
 
 import gc
+from pathlib import Path
 from typing import List, Optional, Sequence
 
 from repro.alloc import registry
@@ -39,8 +40,16 @@ from repro.core import (
     replay_batched,
     training_trace,
 )
+from repro.core.trace import load_trace
 
 from .common import Row, emit, emit_json
+
+#: Checked-in ServeEngine recording (examples/record_engine_trace.py):
+#: a real framework-emitted stream, replayed alongside the synthetic rows.
+ENGINE_TRACE_PATH = (
+    Path(__file__).resolve().parent.parent
+    / "tests" / "data" / "serve_engine_smollm.trace.json"
+)
 
 #: Seed-implementation µs/event measured on the pre-rewrite allocator core
 #: (sort-on-StitchFree, O(n) sBlock removal, unpartitioned inactive pool,
@@ -64,7 +73,10 @@ def _traces(fast: bool):
     n_req = 2000 if fast else 60000
     serve = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=n_req, seed=0)
     serve_name = f"serve_vicuna_{len(serve.events) // 1000}k"
-    return [("train_opt13b_LRO", train), (serve_name, serve)]
+    rows = [("train_opt13b_LRO", train), (serve_name, serve)]
+    if ENGINE_TRACE_PATH.exists():  # real recorded engine stream
+        rows.append(("serve_engine_smollm", load_trace(ENGINE_TRACE_PATH)))
+    return rows
 
 
 def bench_rows(fast: bool, allocators: Optional[Sequence[str]] = None) -> List[Row]:

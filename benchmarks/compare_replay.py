@@ -17,15 +17,25 @@ The gate is **two-tier**, modeled cost first, wall time second:
   2. ``us_per_call`` — host wall time, the number users feel, but noisy
      (~±20 % on a loaded runner). Gated at the looser ``--threshold``.
 
+A third, **informational** tier compares named hotspot terms from
+``BENCH_profile.json`` files (see ``benchmarks/bench_profile.py``) when
+both ``--profile-baseline`` and ``--profile-candidate`` are readable:
+per-term cumulative-time ratios beyond ``--profile-threshold`` (default
+1.5x) and any drift in a term's *call count* (which is deterministic for
+the fixed-seed trace, so any change is a behaviour change) emit
+``::warning`` annotations. This tier never affects the exit code — term
+times are load-sensitive, so it exists to *name* the hot term that moved,
+not to block.
+
 Exit codes: 0 = no regression (or --annotate-only), 1 = at least one
-trace x allocator pair regressed on either tier, or the candidate file
-itself is unreadable (a defect in this very run, never suppressed). A
-missing or unreadable *baseline* (corrupt artifact, schema drift in perf
-history) warns and exits 0 — an absent perf history must never block the
-build. Rows present on only one side (renamed traces, new allocators) are
-reported but never fail the check. GitHub-flavoured ``::warning``/
-``::error`` annotations are emitted for every finding so regressions
-surface on the PR without digging through logs.
+trace x allocator pair regressed on either blocking tier, or the
+candidate file itself is unreadable (a defect in this very run, never
+suppressed). A missing or unreadable *baseline* (corrupt artifact, schema
+drift in perf history) warns and exits 0 — an absent perf history must
+never block the build. Rows present on only one side (renamed traces, new
+allocators) are reported but never fail the check. GitHub-flavoured
+``::warning``/``::error`` annotations are emitted for every finding so
+regressions surface on the PR without digging through logs.
 """
 
 from __future__ import annotations
@@ -82,6 +92,58 @@ def compare(baseline: dict, candidate: dict, threshold: float, model_threshold: 
 _UNITS = {"model": "model-cost/event", "wall": "us/event"}
 
 
+def compare_profiles(baseline: dict, candidate: dict, threshold: float):
+    """Informational hotspot-term diff of two BENCH_profile.json payloads.
+
+    Returns a list of (kind, term, old, new) findings where ``kind`` is
+    ``"time"`` (cumtime ratio past threshold) or ``"ncalls"`` (call-count
+    drift — deterministic, so any change is a behaviour change).
+    """
+    findings = []
+    base_terms = baseline.get("terms", {})
+    cand_terms = candidate.get("terms", {})
+    for term, cand_t in cand_terms.items():
+        base_t = base_terms.get(term)
+        if base_t is None:
+            continue
+        if base_t.get("ncalls") != cand_t.get("ncalls"):
+            findings.append(("ncalls", term, base_t.get("ncalls"), cand_t.get("ncalls")))
+        old_ct, new_ct = base_t.get("cumtime", 0.0), cand_t.get("cumtime", 0.0)
+        if old_ct > 0.01 and new_ct / old_ct > threshold:
+            findings.append(("time", term, old_ct, new_ct))
+    for term, base_t in base_terms.items():
+        if term not in cand_terms:
+            # a term that vanished (function deleted/renamed) is the
+            # largest possible call-count drift, not a clean bill
+            findings.append(("ncalls", term, base_t.get("ncalls"), None))
+    return findings
+
+
+def _profile_tier(profile_baseline, profile_candidate, threshold) -> None:
+    """Run the never-blocking hotspot-term tier; all problems are warnings."""
+    try:
+        with open(profile_baseline) as f:
+            base = json.load(f)
+        with open(profile_candidate) as f:
+            cand = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::notice::hotspot-term diff skipped (unreadable profile): {e}")
+        return
+    findings = compare_profiles(base, cand, threshold)
+    for kind, term, old, new in findings:
+        if kind == "ncalls":
+            print(f"::warning::hotspot term {term}: call count changed "
+                  f"{old} -> {new} (deterministic: behaviour changed)")
+        else:
+            print(f"::warning::hotspot term {term}: {old:.3f}s -> {new:.3f}s "
+                  f"cumulative ({new / old:.2f}x; informational — profile "
+                  f"times are load-sensitive)")
+    if not findings:
+        n = len(cand.get("terms", {}))
+        print(f"hotspot terms: {n} named terms within {threshold:.2f}x of "
+              f"baseline, call counts unchanged")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="previous run's BENCH_replay.json")
@@ -99,7 +161,25 @@ def main(argv=None) -> int:
         "--annotate-only", action="store_true",
         help="emit annotations but always exit 0 (for noisy runners)",
     )
+    ap.add_argument(
+        "--profile-baseline", default=None,
+        help="previous run's BENCH_profile.json (hotspot terms; optional)",
+    )
+    ap.add_argument(
+        "--profile-candidate", default=None,
+        help="this run's BENCH_profile.json (hotspot terms; optional)",
+    )
+    ap.add_argument(
+        "--profile-threshold", type=float, default=1.5,
+        help="cumtime ratio that warn-annotates a named hotspot term "
+        "(informational tier: never affects the exit code)",
+    )
     args = ap.parse_args(argv)
+
+    if args.profile_baseline and args.profile_candidate:
+        _profile_tier(
+            args.profile_baseline, args.profile_candidate, args.profile_threshold
+        )
 
     try:  # a missing/unreadable *baseline* must never block the build
         with open(args.baseline) as f:

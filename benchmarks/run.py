@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
     trace          Fig 14    (memory timeline + S1 convergence)
     serving        beyond-paper: stitched KV arena under churn
     replay         host-side replay throughput (events/sec + BENCH_replay.json)
+    profile        deterministic serving-replay hotspot terms (BENCH_profile.json)
     roofline       assignment: dry-run roofline table
 
 ``--allocator`` (repeatable) sets the backend axis of the modules that
@@ -59,6 +60,7 @@ def main() -> None:
         bench_alloc_latency,
         bench_end2end,
         bench_platforms,
+        bench_profile,
         bench_replay_throughput,
         bench_scaleout,
         bench_serving,
@@ -76,6 +78,7 @@ def main() -> None:
         "trace": bench_trace,
         "serving": bench_serving,
         "replay": bench_replay_throughput,
+        "profile": bench_profile,
         "roofline": roofline_all,
     }
     if args.only is not None and args.only not in modules:

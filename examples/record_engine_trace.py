@@ -1,0 +1,85 @@
+"""Record a fixed-seed ServeEngine run as a replayable checked-in trace.
+
+The golden/bench suites carry fixed-seed *synthetic* traces; this script
+folds in a *real* engine-recorded stream (ROADMAP item): it runs the
+continuous-batching ``ServeEngine`` over the stitched KV arena with a
+pinned seed and saves the ``TraceRecorder`` output in the columnar
+``repro.trace.v1`` JSON format that ``repro.core.load_trace`` replays.
+
+    PYTHONPATH=src python examples/record_engine_trace.py \
+        [--out tests/data/serve_engine_smollm.trace.json]
+
+The checked-in copy (tests/data/serve_engine_smollm.trace.json) is what
+``tests/test_golden_equivalence.py`` pins per-backend digests against and
+what the replay benchmark reports as the ``serve_engine`` row — re-running
+this script with unchanged defaults reproduces it byte-for-byte on the
+same jax version (model numerics feed back into admission/retirement
+order), which is why the artifact is committed rather than regenerated in
+CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_arch  # noqa: E402
+from repro.models.api import family_of  # noqa: E402
+from repro.serve.engine import EngineConfig, ServeEngine  # noqa: E402
+
+
+def record(requests: int = 48, max_new: int = 24, seed: int = 0):
+    entry = get_arch("smollm-135m")
+    cfg = entry.smoke
+    fam = family_of(cfg)
+    rng = np.random.default_rng(seed)
+    params = fam.init_params(cfg, jax.random.PRNGKey(seed))
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=8, n_chunks=512))
+    for _ in range(requests):
+        plen = int(rng.integers(8, 64))
+        eng.submit(rng.integers(0, cfg.vocab, size=plen), max_new=max_new)
+    steps = 0
+    while eng.waiting or eng.running:
+        eng.step()
+        steps += 1
+        if steps > 10_000:
+            raise RuntimeError("engine did not drain")
+    trace = eng.recorder.trace
+    trace.meta.update(
+        arch=cfg.name, requests=requests, max_new=max_new, seed=seed,
+        decode_steps=steps,
+    )
+    return trace
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--out",
+        default=str(
+            Path(__file__).resolve().parent.parent
+            / "tests" / "data" / "serve_engine_smollm.trace.json"
+        ),
+    )
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    trace = record(args.requests, args.max_new, args.seed)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    trace.save(out)
+    print(
+        f"recorded {len(trace.events)} events "
+        f"({trace.n_allocs} allocs, mean {trace.mean_alloc_mb:.1f} MB) -> {out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

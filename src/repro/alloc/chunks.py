@@ -71,6 +71,58 @@ class Extent:
         return self.n * CHUNK_SIZE
 
 
+class ChunkRun:
+    """An immutable view over a slice of a chunk-id list — O(1) splits.
+
+    GMLake's Split divides a pBlock's ordered chunk list; copying the two
+    halves is O(chunks) per split (pBlocks span up to ~1600 chunks on the
+    serving traces). ``ChunkRun`` shares the backing list instead: slicing
+    returns a new view over the same storage, so Split's chunk bookkeeping
+    is O(1) regardless of block size. The backing list is never mutated —
+    Alloc creates it, Split only ever narrows views — which is what makes
+    sharing safe. Views compare equal to any sequence with the same ids,
+    so consumers (extent packing, kernels, tests) treat them as lists.
+    """
+
+    __slots__ = ("base", "start", "stop")
+
+    def __init__(self, base: List[int], start: int = 0, stop: Optional[int] = None):
+        self.base = base
+        self.start = start
+        self.stop = len(base) if stop is None else stop
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+    def __iter__(self):
+        if self.start == 0 and self.stop == len(self.base):
+            return iter(self.base)
+        return iter(self.base[self.start : self.stop])
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            start, stop, step = i.indices(len(self))
+            if step != 1:
+                return self.base[self.start + start : self.start + stop : step]
+            return ChunkRun(self.base, self.start + start, self.start + stop)
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError("ChunkRun index out of range")
+        return self.base[self.start + i]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, ChunkRun):
+            return list(self) == list(other)
+        if isinstance(other, (list, tuple)):
+            return list(self) == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"ChunkRun({list(self)!r})"
+
+
 def pack_extents(chunk_ids: Iterable[int]) -> List[Extent]:
     """Compress an ordered chunk-id list into maximal consecutive runs."""
     out: List[Extent] = []
@@ -278,3 +330,15 @@ class VMMDevice:
         self.cu_mem_address_reserve(n * self.chunk_size)
         self.cu_mem_map(n)
         self.cu_mem_set_access(n)
+
+    def vmm_split_remap(self, na: int, nb: int) -> None:
+        """Split: re-map both halves (``na`` + ``nb`` chunks) of one block.
+
+        Deliberately issues the exact call sequence of two
+        ``vmm_map_existing`` calls: batching the charges into one ledger
+        update per API would change floating-point summation order and
+        break the bit-identity of ``model_cost`` across rounds — the
+        load-independent signal the replay regression gate keys on.
+        """
+        self.vmm_map_existing(na)
+        self.vmm_map_existing(nb)

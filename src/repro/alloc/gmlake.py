@@ -25,7 +25,7 @@ cached small-pool segments before declaring OOM — chunk-granular stitching
 guarantees every inactive byte is usable, which is the paper's
 "theoretically eliminates all fragmentation" claim (§4.2.1) made operational.
 
-Hot-path data structures (rounds 1 and 2 — see docs/ARCHITECTURE.md):
+Hot-path data structures (rounds 1–4 — see docs/ARCHITECTURE.md):
 
   * Inactive pools are size-indexed bucket maps partitioned at the
     fragmentation limit, with running byte totals (round 1). The S3/S4
@@ -33,11 +33,6 @@ Hot-path data structures (rounds 1 and 2 — see docs/ARCHITECTURE.md):
     stitch sources.
   * StitchFree is a lazy-invalidation LRU min-heap of ``(last_use, sid)``
     entries; stale entries are skipped at pop time (round 1).
-  * Each sBlock keeps a **position map** ``pos: pid -> slot index`` over a
-    slot list, so ``_split``'s member substitution is O(1) per referencing
-    sBlock instead of an O(members) ``list.index`` + tail shift, and the
-    split-away pBlock's key is dropped eagerly instead of lingering until
-    StitchFree destroys the sBlock (round 2).
   * Activity uses a **per-sBlock activation generation counter**: a held
     (handed-out) sBlock stamps its members with its current ``gen``;
     a member is active iff it was handed out directly or its stamp matches
@@ -45,20 +40,57 @@ Hot-path data structures (rounds 1 and 2 — see docs/ARCHITECTURE.md):
     — it bumps the generation and defers the structural work (pool
     re-insertion, membership refcounts, byte totals) to a **batched
     reconcile** that runs before the next pool read (round 2).
-  * S3 hands candidates out **per pool bucket**: the walk slices whole
-    bucket tails (blocks of one size) instead of re-querying and removing
-    per candidate, and aggregates membership refcount deltas in one Counter
-    pass (round 2).
-  * Membership back-references are **compact sid arrays** (round 3):
-    each pBlock keeps a flat int list of referencing sBlock ids instead of
-    a set of objects, the take-side Counter counts ints straight out of
-    those lists, and objects are resolved from the sBlock registry once
-    per distinct referencing sBlock — not once per edge. Same visit count,
-    much cheaper visits (int hashing, cache-local list walks).
+  * Membership back-references are **compact flat arrays** (round 3):
+    each pBlock keeps a flat list of its referencing sBlocks, and refcount
+    passes count straight out of those lists. Round 4 stores the objects
+    themselves (id-hashed at C speed), so no loop ever resolves a registry
+    entry per edge or per distinct referencing block.
+  * **Plan-identity segments** (round 4): candidate handout, free plans and
+    pool pending runs all share one representation — ``_Seg``, a frozen
+    bucket slice. Segments cycle wholesale between the pool and successive
+    stitched blocks' free plans: ``_reconcile`` re-inserts a freed plan as
+    one segment append per size (no per-member bucket work), and the take
+    walk moves a whole-bucket slice into the new plan as one list object
+    (no per-member splicing). Each plan freezes its aggregated
+    membership-refcount ``Counter`` (one C-level counting pass per take)
+    alongside ``(segment, generation)`` stamps; any operation that breaks
+    a slice — bucket settle, partial take, split, individual remove —
+    bumps the segment's generation (the plan-generation flag), and
+    ``StitchFree`` destruction appends the dead block to a log that
+    cached Counters replay lazily (``_refs_mark`` — the destroy-dirty
+    watermark) before being trusted, so a frozen plan can never resurrect
+    a destroyed sBlock. When a take consumes exactly a previously-freed
+    cached plan — the dominant serving pattern, a stitched block freed
+    then re-taken at the same size class — ``_hold_sblock`` re-activates
+    the frozen plan in O(members-touched): no candidate walk, no
+    membership recount, no bucket filtering.
+  * **Lazy inactive-sBlock delisting** (round 4): a take re-activates tens
+    of sBlocks that share members with its candidates, and the paired free
+    drops them back; instead of a bucket remove + insert per bounce, the
+    inactive-sBlock pool leaves re-activated entries in place and filters
+    them at its only ordered read (S1 ``exact``), so a bounce costs pure
+    integer refcount updates (``_InactiveSBlocks``).
+  * **Deferred split substitution** (round 4): ``_split`` no longer walks
+    every referencing sBlock to substitute the halves into slot structures;
+    it links ``parent.split_into = (a, b)`` and copies the membership
+    array to both halves. Referencing sBlocks resolve the expansion lazily
+    inside ``members()`` the next time they are held, destroyed, or
+    inspected — walks that already iterate the member list anyway.
+  * **sBlock shell recycling** (round 4): destroyed sBlocks park their
+    shells on a free list; ``_stitch_plan`` re-stamps a recycled shell
+    instead of allocating a fresh object. Shell generations continue
+    monotonically across lives so stale ``holder`` stamps from a previous
+    life can never read as active.
+  * The completing-bucket window keeps its sorted remainder as the settled
+    bucket when the settled base was exhausted (round 4): consecutive
+    same-size takes slice the tail of one persistent sorted list — the
+    per-size cursor — instead of re-sorting a pending run each time.
 
 All of this is mechanical sympathy only. Replay behaviour — S1–S5 state
 counts, peak active/reserved bytes, OOM points — is bit-identical to the
-seed implementation; ``tests/test_golden_equivalence.py`` pins it.
+seed implementation; ``tests/test_golden_equivalence.py`` pins it, and
+``tests/test_plan_identity.py`` additionally pins digest equality with the
+round-4 fast paths force-disabled (``plan_identity=False``).
 """
 
 from __future__ import annotations
@@ -66,16 +98,25 @@ from __future__ import annotations
 import itertools
 from bisect import bisect_left, insort
 from collections import Counter, deque
+
+try:  # C-level "count iterable into mapping" (CPython implementation detail)
+    from _collections import _count_elements
+except ImportError:  # pragma: no cover - pure-python fallback
+    def _count_elements(mapping, iterable):
+        get = mapping.get
+        for elem in iterable:
+            mapping[elem] = get(elem, 0) + 1
 from heapq import heapify, heappop, heappush
 from itertools import chain, repeat
-from operator import attrgetter
-from typing import Dict, Iterator, List, Optional, Tuple
+from operator import attrgetter, itemgetter
+from typing import Dict, List, Optional, Tuple
 
 from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
 from .chunks import (
     CHUNK_SIZE,
     DEFAULT_FRAG_LIMIT,
     SMALL_ALLOC_LIMIT,
+    ChunkRun,
     DeviceOOM,
     Extent,
     VMMDevice,
@@ -89,6 +130,10 @@ from .registry import register
 
 _ids = itertools.count()
 
+_get_sb_refs = attrgetter("sb_refs")
+_get_split_into = attrgetter("split_into")
+_get_block = itemgetter(1)
+
 
 class PBlock:
     """Primitive block (paper: pBlock): an ordered chunk list + one VA.
@@ -98,28 +143,34 @@ class PBlock:
     sBlock's current generation (``holder``/``holder_gen`` — see the module
     docstring). Both tests are O(1); nothing iterates members to flip flags.
 
-    ``sb_sids`` is the membership back-reference — the sids of every live
-    sBlock referencing this pBlock — stored as a **compact int list**
-    rather than a set of objects. The take-side refcount pass walks one of
-    these per candidate member (~10^2–10^3 per S3 stitch on the serving
-    trace), and counting small ints out of flat lists is both cheaper to
-    hash and cache-local, where object sets scatter. Lists stay tiny
-    (typically < 10 entries), so the O(k) removal at destroy is noise.
+    ``sb_refs`` is the membership back-reference — every live sBlock
+    referencing this pBlock — stored as a **compact flat list** (round 3
+    introduced flat arrays; round 4 stores the objects themselves: the
+    refcount loops that consume these lists — Counter building, activation
+    deltas, destroy sweeps — then never pay a registry lookup per entry,
+    and object identity hashes at C speed). Lists stay tiny (typically
+    ~10 entries), so the O(k) removal at destroy is noise.
+
+    ``split_into`` is the deferred-substitution link (round 4): Split sets
+    it to the two halves instead of walking every referencing sBlock.
+    A pBlock with ``split_into`` set is dead — it owns nothing, sits in no
+    pool, and exists only so unresolved member lists can expand it later.
     """
 
     __slots__ = (
         "pid", "size", "chunks", "direct", "holder", "holder_gen",
-        "sb_sids", "va", "_extents",
+        "sb_refs", "split_into", "va", "_extents",
     )
 
-    def __init__(self, chunks: List[int], va: int = 0):
+    def __init__(self, chunks, va: int = 0):
         self.pid = next(_ids)
-        self.chunks = chunks
-        self.size = len(chunks) * CHUNK_SIZE
+        self.chunks = chunks if isinstance(chunks, ChunkRun) else ChunkRun(chunks)
+        self.size = len(self.chunks) * CHUNK_SIZE
         self.direct = False  # handed out on its own (S1/S2/S4 pBlock paths)
         self.holder: Optional["SBlock"] = None  # last sBlock that held it
         self.holder_gen = 0  # holder generation stamped at handout
-        self.sb_sids: List[int] = []  # sids of live sBlocks referencing this
+        self.sb_refs: List["SBlock"] = []  # live sBlocks referencing this
+        self.split_into: Optional[Tuple["PBlock", "PBlock"]] = None
         self.va = va
         self._extents: Optional[List[Extent]] = None
 
@@ -141,40 +192,74 @@ class PBlock:
         return f"PBlock(id={self.pid}, size={self.size >> 20}MB, active={self.active})"
 
 
+class _Seg:
+    """A frozen pool segment: one same-size bucket slice that cycles
+    wholesale between the pool and successive free plans.
+
+    ``entries`` is a ``[(pid, block), ...]`` slice exactly as stored in a
+    pool bucket; while the segment is frozen the very list object moves —
+    pool -> plan -> pool — with no per-member copying. ``gen`` is the
+    segment's **plan-generation flag**: it is bumped whenever the slice
+    stops being *this* slice — consumed by a take into a new plan, settled
+    into a sorted bucket, or partially broken up. A cached plan records
+    the gens of its segments at freeze time; a matching gen proves the
+    slice (and therefore every member's size and membership) is untouched
+    since, which is what makes ``_hold_sblock``'s plan-identity
+    re-activation bit-identical. ``owner`` is the sBlock whose
+    held/pending free plan the segment currently belongs to, or ``None``
+    while pooled.
+    """
+
+    __slots__ = ("size", "entries", "gen", "owner")
+
+    def __init__(self, size: int, entries: List[tuple]):
+        self.size = size
+        self.entries = entries
+        self.gen = 0
+        self.owner: Optional["SBlock"] = None
+
+    def __repr__(self):
+        return f"_Seg(size={self.size >> 20}MB, n={len(self.entries)}, gen={self.gen})"
+
+
 class SBlock:
     """Stitched block (paper: sBlock): a VA re-mapping member pBlock chunks.
 
-    Members start as a flat list; the slot structure — a list of slots, one
-    per original member, plus the position map ``pos: pid -> slot index`` —
-    is materialized lazily by the first ``_split`` that substitutes into this
-    sBlock (most sBlocks are never split into, so most never pay for it).
-    Once materialized, a substitution is O(1): ``pos`` names the slot, the
-    halves replace the parent *inside its slot*, and no other slot moves.
-    ``pblocks``/``chunks`` present the flattened view (chunk coverage is
-    identical across splits, so ``chunks`` caches forever).
+    Members are a flat list. Split substitution is **deferred** (round 4):
+    a member with ``split_into`` set expands to its halves the next time
+    ``members()`` is consulted — the resolution rewrites the list in place,
+    preserving order, so chunk coverage is identical across splits
+    (``chunks`` caches forever).
 
     ``gen`` is the activation generation: bumped on every handout and every
     free. Handout stamps each member with the new value; free only bumps the
     counter, which un-stamps all members at once (O(1) — the structural pool
-    work is deferred to ``GMLakeAllocator._reconcile``). ``active_members``
-    is the *reconciled* count of active members, used by the pool/LRU
-    machinery; ``active`` recomputes the truth from member stamps so it is
-    correct even between a free and the next reconcile.
+    work is deferred to ``GMLakeAllocator._reconcile``). Shell recycling
+    keeps ``gen`` monotone across lives so stale stamps stay stale.
+    ``active_members`` is the *reconciled* count of active members, used by
+    the pool/LRU machinery; ``active`` recomputes the truth from member
+    stamps so it is correct even between a free and the next reconcile.
 
-    While held, the block carries its own **free plan**: ``_plan`` groups
-    members by size for bucket-granular pool re-insertion (for a fresh
-    stitch its lists are the very bucket slices the take pass removed — no
-    per-member rebuilding) and ``_refs`` counts members per referencing
-    sBlock, keyed by sid. Both are exact at free time because a held member's size and
-    membership set are frozen: splits and new stitches only touch inactive
-    pBlocks, and StitchFree can only destroy a fully-inactive sBlock, which
-    by the activity-exclusivity argument shares no member with any held one.
+    While held (and until its free is reconciled), the block carries its own
+    **free plan**: ``_plan`` is a list of ``(_Seg, gen)`` pairs — the very
+    segments the take pass consumed, with their plan-generation stamps at
+    freeze time — and ``_refs`` is the plan's membership-refcount Counter
+    (referencing sBlock -> member count, keyed by object). Both are exact
+    at free time because a held member's size and membership set are
+    frozen: splits and new stitches only touch inactive pBlocks, and
+    StitchFree can only destroy a fully-inactive sBlock, which by the
+    activity-exclusivity argument shares no member with any held one.
+    After reconcile, plan and refs are *kept* as a cache (``_refs_mark``
+    remembers the dead-block log position): if every segment is still
+    pooled with a matching generation when the block wins S1 again,
+    ``_hold_sblock`` re-activates the whole plan without a walk or a
+    recount (plan-identity reuse).
     """
 
     __slots__ = (
-        "sid", "size", "slots", "pos", "n_members", "active_members",
-        "gen", "held", "va", "last_use", "_members", "_plan", "_refs",
-        "_chunks", "_extents",
+        "sid", "size", "n_members", "active_members", "gen", "held", "va",
+        "last_use", "pool_listed", "heap_lu", "_members", "_plan", "_refs",
+        "_refs_mark", "_chunks", "_extents",
     )
 
     def __init__(
@@ -184,14 +269,12 @@ class SBlock:
         va: int = 0,
         size: Optional[int] = None,
         active_members: Optional[int] = None,
-        hold: bool = False,
-        refs: Optional[Counter] = None,
-        plan: Optional[Dict[int, list]] = None,
     ):
+        """Plain (non-held) construction — the S2 opportunistic stitch and
+        test paths. Held stitches go through ``GMLakeAllocator._stitch_plan``
+        which fuses member stamping with the segment walk."""
         self.sid = next(_ids)
-        self._members: Optional[List[PBlock]] = pblocks
-        self.slots: Optional[List[List[PBlock]]] = None  # lazy: see _split
-        self.pos: Optional[Dict[int, int]] = None
+        self._members: List[PBlock] = pblocks
         self.n_members = len(pblocks)
         # callers that already know the totals pass them in; both are
         # cross-checked against the members by check_invariants()
@@ -201,42 +284,51 @@ class SBlock:
             if active_members is None
             else active_members
         )
-        self.gen = 1 if hold else 0
-        self.held = hold
+        self.gen = 0
+        self.held = False
         self.va = va
         self.last_use = tick
-        self._plan = plan
-        self._refs = refs
+        self.pool_listed = False
+        self.heap_lu: Optional[int] = None  # last_use of this block's live
+        # LRU-heap entry, or None — dedups crossing pushes (round 4)
+        self._plan: Optional[List[Tuple[_Seg, int]]] = None
+        self._refs: Optional[Dict["SBlock", int]] = None
+        self._refs_mark = 0
         self._chunks: Optional[List[int]] = None
         self._extents: Optional[List[Extent]] = None
-        if hold:  # handed out at creation (S3/S4): stamp every member
-            sid = self.sid
-            for p in pblocks:
-                p.holder = self
-                p.holder_gen = 1
-                p.sb_sids.append(sid)
-            # the free plan's refcounts: the candidates' memberships as
-            # counted by the take pass, plus this block itself
-            if refs is None:
-                self._refs = refs = Counter()
-            refs[sid] = self.n_members
-        else:  # S2 opportunistic stitch: members keep their own activity
-            sid = self.sid
-            for p in pblocks:
-                p.sb_sids.append(sid)
+        for p in pblocks:
+            p.sb_refs.append(self)
 
     def members(self) -> List[PBlock]:
-        """Current member list, split halves in place of their parent."""
-        if self.slots is None:
-            return self._members
-        return [p for slot in self.slots for p in slot]
+        """Current member list, split halves in place of their parent.
 
-    def materialize_slots(self) -> None:
-        """Build the slot structure + position map on first substitution."""
-        if self.slots is None:
-            self.slots = [[p] for p in self._members]
-            self.pos = {p.pid: j for j, p in enumerate(self._members)}
-            self._members = None
+        Deferred split links (``split_into``) are resolved here, in one
+        in-place rewrite that preserves member order; until some walk needs
+        the members, a split costs the referencing sBlocks nothing. The
+        no-split probe runs as one C-level ``any(map(...))`` pass.
+        """
+        ms = self._members
+        if any(map(_get_split_into, ms)):
+            out: List[PBlock] = []
+            ap = out.append
+            for q in ms:
+                sp = q.split_into
+                if sp is None:
+                    ap(q)
+                else:
+                    stack = [sp[1], sp[0]]
+                    while stack:
+                        q2 = stack.pop()
+                        sp2 = q2.split_into
+                        if sp2 is None:
+                            ap(q2)
+                        else:
+                            stack.append(sp2[1])
+                            stack.append(sp2[0])
+            self._members = out
+            self.n_members = len(out)
+            return out
+        return ms
 
     @property
     def pblocks(self) -> List[PBlock]:
@@ -272,11 +364,15 @@ class SBlock:
         )
 
 
-_get_sb_sids = attrgetter("sb_sids")
-
-
 def _key(block) -> int:
     return block.pid if isinstance(block, PBlock) else block.sid
+
+
+def _count_entry_sids(counter: dict, entries: List[tuple]) -> None:
+    """Count every referencing block of ``entries``' members into ``counter``."""
+    _count_elements(
+        counter, chain.from_iterable(map(_get_sb_refs, map(_get_block, entries)))
+    )
 
 
 class _IndexedPool:
@@ -290,25 +386,25 @@ class _IndexedPool:
     compared to the number of blocks; the `_sizes` index only changes when a
     bucket is created or emptied.
 
-    ``add_batch``/``remove_batch`` are the bucket-granular entry points used
-    by the stitched paths: one list merge / one filter per touched bucket
-    instead of a bisect + mid-list shift per member.
-
-    Inserts are **lazily settled**: new entries land in a per-size pending
-    run (one list append) and are merged into the sorted bucket only when an
-    *ordered* query actually reaches that size. Byte/count totals update at
-    insert time, so the O(1) S3-vs-S4 decision never waits on a settle, and
-    sizes the candidate walk never descends to are never sorted at all —
-    which is most of them, since the walk stops at coverage. Settling is
-    timing-transparent: every ordered read sees exactly the bucket an eager
-    insert would have produced.
+    Inserts are **lazily settled**: loose entries land in a per-size pending
+    list (one append) and whole freed-plan slices arrive as frozen ``_Seg``
+    segments (one list append each, round 4); both are merged into the
+    sorted bucket only when an *ordered* query actually reaches that size.
+    Byte/count totals update at insert time, so the O(1) S3-vs-S4 decision
+    never waits on a settle, and sizes the candidate walk never descends to
+    are never sorted at all — which is most of them, since the walk stops at
+    coverage. Settling is timing-transparent: every ordered read sees
+    exactly the bucket an eager insert would have produced. Settling kills
+    the merged segments (their slices stop being identifiable), which is
+    what keeps frozen-plan reuse trivially safe.
     """
 
-    __slots__ = ("_buckets", "_pending", "_sizes", "_count", "bytes")
+    __slots__ = ("_buckets", "_loose", "_segs", "_sizes", "_count", "bytes")
 
     def __init__(self):
         self._buckets: Dict[int, List[tuple]] = {}  # size -> [(id, block)] asc
-        self._pending: Dict[int, List[tuple]] = {}  # size -> unsorted inserts
+        self._loose: Dict[int, List[tuple]] = {}  # size -> unsorted inserts
+        self._segs: Dict[int, List[_Seg]] = {}  # size -> frozen slices
         self._sizes: List[int] = []  # ascending distinct sizes
         self._count = 0
         self.bytes = 0  # running sum of member sizes
@@ -318,29 +414,74 @@ class _IndexedPool:
 
     def __iter__(self):
         for size in self._sizes:
-            yield from (b for _k, b in self._settled(size))
+            yield from map(_get_block, self._settled(size))
 
     def _settled(self, size: int) -> List[tuple]:
-        """The sorted bucket for ``size``, merging any pending run first."""
+        """The sorted bucket for ``size``, merging loose runs and segments.
+
+        Merged segments die (``refs = None``): their entries now belong to
+        the settled bucket and can be cherry-picked, so any cached plan
+        referencing them must fall back to the recounting path.
+        """
         bucket = self._buckets[size]
-        run = self._pending.pop(size, None)
-        if run is not None:
-            bucket.extend(run)
-            bucket.sort()
+        loose = self._loose.pop(size, None)
+        segs = self._segs.pop(size, None)
+        if loose is None and segs is None:
+            return bucket
+        if loose is not None:
+            bucket.extend(loose)
+        if segs is not None:
+            for seg in segs:
+                bucket.extend(seg.entries)
+                seg.gen += 1  # broken up: cached plan stamps go stale
+        bucket.sort()
         return bucket
+
+    def _ensure_size(self, size: int) -> None:
+        if size not in self._buckets:
+            self._buckets[size] = []
+            insort(self._sizes, size)
+
+    def _drop_size_if_empty(self, size: int) -> None:
+        if not self._buckets[size] and size not in self._loose and size not in self._segs:
+            del self._buckets[size]
+            self._sizes.pop(bisect_left(self._sizes, size))
 
     def add(self, block) -> None:
         size = block.size
-        bucket = self._buckets.get(size)
-        if bucket is None:
-            self._buckets[size] = []
-            insort(self._sizes, size)
-        run = self._pending.get(size)
-        if run is None:
-            run = self._pending[size] = []
-        run.append((_key(block), block))
+        self._ensure_size(size)
+        loose = self._loose.get(size)
+        if loose is None:
+            self._loose[size] = [(_key(block), block)]
+        else:
+            loose.append((_key(block), block))
         self._count += 1
         self.bytes += size
+
+    def add_seg(self, seg: _Seg) -> None:
+        """Queue one frozen plan slice for a size bucket: a single append."""
+        size = seg.size
+        self._ensure_size(size)
+        segs = self._segs.get(size)
+        if segs is None:
+            self._segs[size] = [seg]
+        else:
+            segs.append(seg)
+        n = len(seg.entries)
+        self._count += n
+        self.bytes += size * n
+
+    def remove_seg(self, seg: _Seg) -> None:
+        """Remove one still-frozen pooled segment wholesale (plan reuse)."""
+        size = seg.size
+        segs = self._segs[size]
+        segs.remove(seg)
+        if not segs:
+            del self._segs[size]
+        n = len(seg.entries)
+        self._count -= n
+        self.bytes -= size * n
+        self._drop_size_if_empty(size)
 
     def remove(self, block) -> None:
         size = block.size
@@ -355,21 +496,6 @@ class _IndexedPool:
             bucket.pop(i)
         self._count -= 1
         self.bytes -= size
-
-    def add_batch(self, size: int, entries: List[tuple]) -> None:
-        """Queue ``entries`` [(id, block), ...] for one size bucket: one
-        list-extend now, one sort when (if ever) an ordered query reaches
-        this size."""
-        if self._buckets.get(size) is None:
-            self._buckets[size] = []
-            insort(self._sizes, size)
-        run = self._pending.get(size)
-        if run is None:
-            self._pending[size] = list(entries)
-        else:
-            run.extend(entries)
-        self._count += len(entries)
-        self.bytes += size * len(entries)
 
     def remove_batch(self, size: int, ids: set) -> None:
         """Remove the entries with the given ids from one size bucket.
@@ -407,6 +533,68 @@ class _IndexedPool:
         return None
 
 
+class _InactiveSBlocks(_IndexedPool):
+    """The inactive-sBlock pool, with **lazy delisting** (round 4).
+
+    On the stitch-heavy traces, every take re-activates tens of sBlocks
+    whose members it touches and the paired free drops them back — the
+    eager scheme paid a bucket remove + insert (plus a heap push) per
+    bounce. Here re-activation leaves the entry in place (``pool_listed``
+    stays set on the block); a stale entry — one whose block is currently
+    active — is filtered out at ``exact()`` read time, and an inactive
+    block is (re-)listed only if its flag is clear. Since ``exact`` is the
+    only ordered read on the hot path, a block bouncing between active and
+    inactive costs pure integer refcount updates. Selection is unchanged:
+    ``exact`` still returns the lowest-sid *truly inactive* block of the
+    size, exactly what the eager pool would have held. ``sweep()`` restores
+    the eager representation for iteration/invariant checks.
+    """
+
+    __slots__ = ()
+
+    def exact(self, size: int):
+        if size not in self._buckets:
+            return None
+        bucket = self._settled(size)
+        i = 0
+        n = len(bucket)
+        while i < n:
+            s = bucket[i][1]
+            if s.active_members == 0:
+                break
+            s.pool_listed = False  # stale: delist lazily
+            i += 1
+        if i:
+            del bucket[:i]
+            self._count -= i
+            self.bytes -= size * i
+        if not bucket:
+            del self._buckets[size]
+            self._sizes.pop(bisect_left(self._sizes, size))
+            return None
+        return bucket[0][1]
+
+    def sweep(self) -> None:
+        """Drop every stale entry: the pool then holds exactly the inactive
+        set, as the eager scheme would (iteration/invariant paths only)."""
+        for size in list(self._sizes):
+            bucket = self._settled(size)
+            kept = []
+            for e in bucket:
+                s = e[1]
+                if s.active_members == 0:
+                    kept.append(e)
+                else:
+                    s.pool_listed = False
+                    self._count -= 1
+                    self.bytes -= size
+            if kept:
+                self._buckets[size] = kept
+            else:
+                del self._buckets[size]
+                self._sizes.pop(bisect_left(self._sizes, size))
+
+
 class _PartitionedPool:
     """Inactive pBlock pool split at the fragmentation limit (paper §4.2.3).
 
@@ -438,6 +626,12 @@ class _PartitionedPool:
 
     def add(self, block) -> None:
         self._pool_for(block.size).add(block)
+
+    def add_seg(self, seg: _Seg) -> None:
+        self._pool_for(seg.size).add_seg(seg)
+
+    def remove_seg(self, seg: _Seg) -> None:
+        self._pool_for(seg.size).remove_seg(seg)
 
     def remove(self, block) -> None:
         self._pool_for(block.size).remove(block)
@@ -477,6 +671,11 @@ class GMLakeAllocator:
     ``check_invariants``), so every BestFit query observes exactly the state
     an eager implementation would have. Reconciliation timing is therefore
     unobservable, which is what keeps replay digests bit-identical.
+
+    ``plan_identity=False`` force-disables the round-4 fast paths (frozen
+    segment Counters, wholesale segment reuse, cached-plan re-activation):
+    every consumption re-counts membership from the sid arrays. Behaviour
+    is bit-identical either way — ``tests/test_plan_identity.py`` pins it.
     """
 
     name = "gmlake"
@@ -488,12 +687,20 @@ class GMLakeAllocator:
     #: ``chunks.DEFAULT_FRAG_LIMIT``.
     TUNED_FRAG_LIMIT = 8 * 1024 * 1024
 
+    #: Destroyed-sBlock shells kept for recycling (round 4).
+    MAX_SHELLS = 64
+
+    #: Destroyed-block log length that triggers compaction (drop cached
+    #: plans, clear the log) so memory stays O(live), not O(destroys).
+    DEAD_LOG_LIMIT = 4096
+
     def __init__(
         self,
         device: VMMDevice,
         frag_limit: int = TUNED_FRAG_LIMIT,
         sblock_va_budget: Optional[int] = None,
         record_timeline: bool = False,
+        plan_identity: bool = True,
     ):
         self.device = device
         self.frag_limit = frag_limit
@@ -501,11 +708,19 @@ class GMLakeAllocator:
         self.sblock_va_budget = (
             sblock_va_budget if sblock_va_budget is not None else 4 * device.capacity_bytes
         )
+        self.plan_identity = plan_identity
         self.stats = AllocatorStats(record_timeline=record_timeline)
         self.state_counts: Dict[str, int] = {f"S{i}": 0 for i in range(1, 6)}
+        #: round-4 fast-path hit counters (diagnostics only; not digest
+        #: material). Shared into ``stats.counters`` for the profile harness.
+        self.hotspots: Dict[str, int] = {
+            "seg_reuse": 0, "seg_recount": 0, "hold_fast": 0, "hold_slow": 0,
+            "shell_reuse": 0,
+        }
+        self.stats.counters = self.hotspots
 
         self._inactive_p = _PartitionedPool(frag_limit)
-        self._inactive_s = _IndexedPool()
+        self._inactive_s = _InactiveSBlocks()
         self._pblocks: Dict[int, PBlock] = {}  # registry of all live pBlocks
         self._sblocks: Dict[int, SBlock] = {}  # registry of all live sBlocks
         # StitchFree LRU: lazy-invalidation min-heap of (last_use, sid).
@@ -518,6 +733,10 @@ class GMLakeAllocator:
         # sBlocks freed since the last reconcile: their generation is already
         # bumped (members read as inactive) but pools/refcounts are stale.
         self._pending_frees: List[SBlock] = []
+        self._shells: List[SBlock] = []  # recycled sBlock shells
+        # append-only log of destroyed sBlocks; cached plan Counters are
+        # purged lazily against it (see SBlock._refs_mark / _purge_refs)
+        self._dead_refs: List[SBlock] = []
         self._sblock_va_bytes = 0
         self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
         self._tick = 0
@@ -539,18 +758,13 @@ class GMLakeAllocator:
     def _activate_p(self, p: PBlock) -> None:
         """Inactive -> directly active: leave the pool, bump member refcounts.
 
-        Single-block handout (S1 pBlock / S2): O(log bucket + |p.sb_sids|).
+        Single-block handout (S1 pBlock / S2): O(log bucket + |p.sb_refs|).
         """
         assert not p.active
         self._inactive_p.remove(p)
         p.direct = True
-        inactive_s_remove = self._inactive_s.remove
-        sblocks = self._sblocks
-        for sid in p.sb_sids:
-            s = sblocks[sid]
-            if s.active_members == 0:
-                inactive_s_remove(s)
-            s.active_members += 1
+        for s in p.sb_refs:
+            s.active_members += 1  # re-listing is lazy: exact() filters
 
     def _deactivate_p(self, p: PBlock) -> None:
         """Directly active -> inactive. The single-block inverse.
@@ -563,111 +777,173 @@ class GMLakeAllocator:
         p.direct = False
         self._inactive_p.add(p)
         heap = self._lru_heap
-        inactive_s_add = self._inactive_s.add
-        sblocks = self._sblocks
-        for sid in p.sb_sids:
-            s = sblocks[sid]
+        inactive_s = self._inactive_s
+        for s in p.sb_refs:
             m = s.active_members - 1
             s.active_members = m
             assert m >= 0
             if m == 0:
-                inactive_s_add(s)
-                heappush(heap, (s.last_use, s.sid))
+                if s.heap_lu != s.last_use:
+                    s.heap_lu = s.last_use
+                    heappush(heap, (s.last_use, s.sid))
+                if not s.pool_listed:
+                    s.pool_listed = True
+                    inactive_s.add(s)
+
+    def _purge_refs(self, s: SBlock) -> None:
+        """Drop destroyed sBlocks from a cached plan's refcount Counter.
+
+        Destruction removes the dead block from every member's ``sb_refs``;
+        a reconciled block's cached ``_refs`` Counter froze those counts, so
+        before the S1 fast path trusts it, the dead-block log is replayed
+        from ``_refs_mark`` (the destroy-dirty watermark set at reconcile).
+        O(destroys since the block was reconciled) — typically zero or one.
+        """
+        dead = self._dead_refs
+        n = len(dead)
+        mark = s._refs_mark
+        if mark < n:
+            refs = s._refs
+            for r in dead[mark:]:
+                refs.pop(r, None)
+            s._refs_mark = n
 
     def _hold_sblock(self, s: SBlock) -> None:
-        """Hand out an existing inactive sBlock (S1): one generation bump,
-        one stamp per member, one bucket filter per member size, one
-        aggregated refcount pass. No per-member pool queries. The same walk
-        rebuilds the block's free plan (see ``SBlock``), which stays exact
-        until the matching free because held members are frozen."""
+        """Hand out an existing inactive sBlock (S1).
+
+        Fast path (plan-identity reuse, round 4): if the block's cached free
+        plan — the very segments its last free re-inserted into the pool —
+        is still entirely frozen and pooled, re-activating it is one
+        ``remove_seg`` per size plus a stamping walk: no candidate scan, no
+        bucket filtering, no membership recount (each segment's Counter is
+        exact by the frozen-slice invariant once the dead-sid log is
+        replayed). Slow path: the round-2 scheme — one generation bump, one
+        stamp per member, one bucket filter per member size, one refcount
+        pass per size — which also rebuilds fresh frozen segments so the
+        next cycle is fast again.
+        """
         s.gen += 1
         s.held = True
+        # the selected block leaves the inactive pool eagerly (it is being
+        # handed out); every *other* re-activated sBlock is delisted lazily
+        self._inactive_s.remove(s)
+        s.pool_listed = False
         gen = s.gen
+        plan = s._plan
+        if plan is not None and self.plan_identity:
+            members = s.members()  # resolves splits (which also bump seg gens)
+            if all(
+                seg.gen == g and seg.owner is None for seg, g in plan
+            ) and sum(len(seg.entries) for seg, _g in plan) == len(members):
+                # every slice of the cached plan survived untouched: the pool
+                # still holds exactly this block's members, in these slices,
+                # and the frozen refcount Counter is exact modulo destroyed
+                # blocks — which the dead-log replay removes
+                self._purge_refs(s)
+                remove_seg = self._inactive_p.remove_seg
+                for seg, _g in plan:
+                    remove_seg(seg)
+                    seg.owner = s
+                for p in members:
+                    p.holder = s
+                    p.holder_gen = gen
+                self._apply_activation(s._refs)  # includes s: already delisted
+                self.hotspots["hold_fast"] += 1
+                return
+        self.hotspots["hold_slow"] += 1
         pools = (self._inactive_p.sub, self._inactive_p.main)
         limit = self.frag_limit
-        plan: Dict[int, list] = {}
-        member_sid_lists = []
+        by_size: Dict[int, list] = {}
         for p in s.members():
             p.holder = s
             p.holder_gen = gen
-            entries = plan.get(p.size)
+            entries = by_size.get(p.size)
             if entries is None:
-                entries = plan[p.size] = []
-            entries.append((p.pid, p))
-            member_sid_lists.append(p.sb_sids)
-        for size, entries in plan.items():
+                by_size[p.size] = [(p.pid, p)]
+            else:
+                entries.append((p.pid, p))
+        new_plan: List[Tuple[_Seg, int]] = []
+        refs: Dict[SBlock, int] = {}
+        for size, entries in by_size.items():
             pools[size >= limit].remove_batch(size, {e[0] for e in entries})
-        refs = Counter(chain.from_iterable(member_sid_lists))
-        self._apply_activation(refs)  # includes s itself: it leaves the pool
-        s._plan = plan
+            _count_entry_sids(refs, entries)
+            seg = _Seg(size, entries)
+            seg.owner = s
+            new_plan.append((seg, 0))
+        self._apply_activation(refs)
+        s._plan = new_plan
         s._refs = refs
 
-    def _apply_activation(self, refs: Counter) -> None:
+    def _apply_activation(self, refs: Dict["SBlock", int]) -> None:
         """Apply aggregated +delta membership refcounts (activation side).
 
-        ``refs`` maps sid -> count (the compact-array take pass counts
-        ints; objects are resolved here, once per *distinct* referencing
-        sBlock rather than once per edge). Counts only grow within one
-        batch, so an sBlock leaves the inactive pool iff its count was
-        zero before the batch — identical outcome to incrementing one
-        member at a time.
+        ``refs`` maps referencing sBlock -> count (objects are the Counter
+        keys, so no registry resolution happens here at all). Re-activated
+        blocks are *not* removed from the inactive pool — delisting is lazy
+        (see ``_InactiveSBlocks``) — so this is a pure integer pass.
         """
-        inactive_s_remove = self._inactive_s.remove
-        sblocks = self._sblocks
-        for sid, d in refs.items():
-            s = sblocks[sid]
-            if s.active_members == 0:
-                inactive_s_remove(s)
+        for s, d in refs.items():
             s.active_members += d
 
     def _reconcile(self) -> None:
         """Apply all deferred sBlock frees in one batched pass.
 
-        Cost: O(touched buckets + distinct referencing sBlocks) across *all*
-        pending frees — the per-member work was already paid once at handout,
-        when the free plan was recorded — vs. one bucket insort and one
-        refcount walk per member in the eager scheme. Pool contents, byte totals,
-        inactive-sBlock set and LRU entries end up exactly as if each free
-        had been applied eagerly at its own tick (counts only shrink here,
-        so zero-crossings are batch-order independent; heap entries are
-        (last_use, sid) values fixed at free time; bucket merges commute
-        with interleaved single-block frees because buckets are id-sorted).
+        Cost: O(plan segments + distinct referencing sBlocks) across *all*
+        pending frees — the per-member work was already paid once at
+        handout, when the free plan's segments were frozen: re-inserting a
+        plan is one ``add_seg`` append per size (round 4; no bucket merging
+        or sorting at all — a settle, if one ever happens, timsort-gallops
+        the sorted runs then). Pool contents, byte totals, inactive-sBlock
+        set and LRU entries end up exactly as if each free had been applied
+        eagerly at its own tick (counts only shrink here, so zero-crossings
+        are batch-order independent; heap entries are (last_use, sid)
+        values fixed at free time; segment appends commute with interleaved
+        single-block frees because ordered reads settle to one id-sorted
+        bucket either way). The plan stays cached on the block afterwards —
+        ``_hold_sblock`` re-activates it wholesale if it survives frozen.
         """
         pending = self._pending_frees
         if not pending:
             return
         self._pending_frees = []
-        pools = (self._inactive_p.sub, self._inactive_p.main)
+        main = self._inactive_p.main
+        sub = self._inactive_p.sub
         limit = self.frag_limit
-        if len(pending) == 1:  # common case: no cross-free merging needed
-            s = pending[0]
-            by_size, refs = s._plan, s._refs
-            s._plan = s._refs = None
-        else:
-            by_size = {}
-            refs = Counter()
-            for s in pending:
-                for size, entries in s._plan.items():
-                    batch = by_size.get(size)
-                    if batch is None:
-                        by_size[size] = entries  # plans are single-use: own it
-                    else:
-                        batch.extend(entries)
-                refs.update(s._refs)
-                s._plan = s._refs = None
-        for size, entries in by_size.items():
-            pools[size >= limit].add_batch(size, entries)
         heap = self._lru_heap
         inactive_s_add = self._inactive_s.add
-        sblocks = self._sblocks
-        for sid, d in refs.items():
-            s = sblocks[sid]
-            m = s.active_members - d
-            s.active_members = m
-            assert m >= 0
-            if m == 0:
-                inactive_s_add(s)
-                heappush(heap, (s.last_use, s.sid))
+        dead_n = len(self._dead_refs)
+        for s in pending:
+            for seg, _g in s._plan:
+                seg.owner = None
+                size = seg.size
+                pool = main if size >= limit else sub
+                if size not in pool._buckets:
+                    pool._buckets[size] = []
+                    insort(pool._sizes, size)
+                segs = pool._segs.get(size)
+                if segs is None:
+                    pool._segs[size] = [seg]
+                else:
+                    segs.append(seg)
+                n = len(seg.entries)
+                pool._count += n
+                pool.bytes += size * n
+            s._refs_mark = dead_n  # refs cached for plan-identity re-holds
+            # decrement from the plan's frozen Counter (keys are the
+            # referencing sBlocks themselves): counts only shrink, so
+            # zero-crossings are batch-order independent and land on
+            # whichever decrement is last
+            for r, d in s._refs.items():
+                m = r.active_members - d
+                r.active_members = m
+                assert m >= 0
+                if m == 0:
+                    if r.heap_lu != r.last_use:
+                        r.heap_lu = r.last_use
+                        heappush(heap, (r.last_use, r.sid))
+                    if not r.pool_listed:
+                        r.pool_listed = True
+                        inactive_s_add(r)
         # lazy invalidation leaves stale entries behind; when they outnumber
         # the live ones, rebuild from the inactive set (one valid entry per
         # inactive sBlock) so heap memory stays O(inactive), not O(frees)
@@ -686,43 +962,47 @@ class GMLakeAllocator:
         p.direct = True  # handed out or immediately stitched by the caller
         return p
 
-    def _split(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
-        """Paper's Split: divide an *inactive* pBlock; re-map both halves.
+    def _split_parts(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
+        """The Split core: divide ``p`` and re-map, no pool bookkeeping.
 
-        sBlocks referencing the old pBlock substitute the two halves inside
-        its slot (chunk coverage identical) — the paper's "new pBlocks
-        replace the predecessor" without invalidating the stitched pattern
-        tape. The position map (materialized on the first substitution into
-        each sBlock) makes this O(1): ``pos`` names the slot, no other slot
-        moves, and the dead pBlock's key is dropped from every referencing
-        map right here.
+        sBlocks referencing the old pBlock see the two halves in its place
+        (chunk coverage identical) — the paper's "new pBlocks replace the
+        predecessor" without invalidating the stitched pattern tape. The
+        substitution is **deferred** (round 4): the parent records
+        ``split_into = (a, b)`` and both halves inherit its membership
+        array (two C-level list copies); referencing sBlocks expand the
+        link lazily inside ``members()``. Chunk slicing is O(1) —
+        ``ChunkRun`` views share the parent's chunk storage.
         """
         assert not p.active and 0 < first_size < p.size
         assert first_size % CHUNK_SIZE == 0
         k = first_size // CHUNK_SIZE
-        self._inactive_p.remove(p)
         del self._pblocks[p.pid]
-        a = PBlock(p.chunks[:k])
-        b = PBlock(p.chunks[k:])
+        chunks = p.chunks
+        a = PBlock(chunks[:k])
+        b = PBlock(chunks[k:])
         self._pblocks[a.pid] = a
         self._pblocks[b.pid] = b
         # two new VA reservations + remap (charged to the device model)
-        self.device.vmm_map_existing(len(a.chunks))
-        self.device.vmm_map_existing(len(b.chunks))
-        sblocks = self._sblocks
-        for sid in p.sb_sids:
-            s = sblocks[sid]
-            s.materialize_slots()
-            j = s.pos.pop(p.pid)
-            slot = s.slots[j]
-            i = slot.index(p)  # slots start singleton and stay tiny
-            slot[i : i + 1] = [a, b]
-            s.pos[a.pid] = j
-            s.pos[b.pid] = j
-            s.n_members += 1
-            a.sb_sids.append(sid)
-            b.sb_sids.append(sid)
-        p.sb_sids.clear()
+        self.device.vmm_split_remap(k, len(b.chunks))
+        refs = p.sb_refs
+        if refs:
+            a.sb_refs = refs.copy()
+            b.sb_refs = refs.copy()
+            refs.clear()
+        p.split_into = (a, b)
+        return a, b
+
+    def _split(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
+        """Paper's Split over a *pooled* pBlock: both halves re-pooled.
+
+        The S3 completing-bucket split uses ``_split_parts`` directly — its
+        parent is already in hand and the first half joins the stitch, so
+        round-tripping either through the pool (a bucket settle + sort per
+        split) would be pure churn.
+        """
+        self._inactive_p.remove(p)
+        a, b = self._split_parts(p, first_size)
         self._inactive_p.add(a)
         self._inactive_p.add(b)
         return a, b
@@ -732,31 +1012,84 @@ class GMLakeAllocator:
         pblocks: List[PBlock],
         total_size: Optional[int] = None,
         active_members: Optional[int] = None,
-        hold: bool = False,
-        refs: Optional[Counter] = None,
-        plan: Optional[Dict[int, list]] = None,
     ) -> SBlock:
-        """Paper's Stitch: the only creator of sBlocks. Re-maps, no Create.
-
-        ``hold=True`` marks the new sBlock as the handed-out allocation:
-        every member is stamped with its generation and the take pass's
-        ``refs`` Counter + bucket slices are cached as the free plan
-        (S3/S4). ``hold=False`` is the S2 opportunistic stitch, whose
-        members keep their own state.
-        """
+        """Paper's Stitch, non-held form: the S2 opportunistic stitch whose
+        members keep their own state. Held stitches (S3/S4) go through
+        ``_stitch_plan``. Re-maps, no Create."""
         if total_size is None:
             total_size = sum(p.size for p in pblocks)
         n = total_size // CHUNK_SIZE  # == total member chunk count
         self.device.vmm_map_existing(n)
         s = SBlock(
             pblocks, tick=self._tick, size=total_size,
-            active_members=active_members, hold=hold, refs=refs, plan=plan,
+            active_members=active_members,
         )
         self._sblocks[s.sid] = s
         self._sblock_va_bytes += s.size
         if s.active_members == 0:
+            s.pool_listed = True
+            s.heap_lu = s.last_use
             self._inactive_s.add(s)
             heappush(self._lru_heap, (s.last_use, s.sid))
+        self._maybe_stitch_free()
+        return s
+
+    def _stitch_plan(
+        self,
+        plan: Dict[int, _Seg],
+        total_size: int,
+        refs: Dict["SBlock", int],
+        members: List[PBlock],
+    ) -> SBlock:
+        """Stitch and hand out the take pass's segments (S3/S4).
+
+        One fused walk stamps every member with the new block's generation
+        and appends the new block to its membership array; the take pass's
+        refcount Counter plus this block's own entry is frozen as the free
+        plan for the eventual ``free``/``_reconcile``, and the segments
+        (with their generation stamps) as the reusable frozen slices for
+        the next cycle. Recycles a destroyed shell when one is available;
+        shell generations continue monotonically so stale holder stamps
+        from a previous life can never match.
+        """
+        self.device.vmm_map_existing(total_size // CHUNK_SIZE)
+        shells = self._shells
+        if shells:
+            s = shells.pop()
+            gen = s.gen + 1  # strictly above every stamp of the prior life
+            self.hotspots["shell_reuse"] += 1
+        else:
+            s = SBlock.__new__(SBlock)
+            gen = 1
+        sid = next(_ids)
+        n_members = len(members)
+        s.sid = sid
+        s.size = total_size
+        s.n_members = n_members
+        s.active_members = n_members
+        s.gen = gen
+        s.held = True
+        s.va = 0
+        s.last_use = self._tick
+        s.pool_listed = False
+        s.heap_lu = None
+        s._refs = refs
+        s._refs_mark = 0
+        s._chunks = None
+        s._extents = None
+        plan_list: List[Tuple[_Seg, int]] = []
+        for seg in plan.values():
+            seg.owner = s
+            plan_list.append((seg, seg.gen))
+        for p in members:
+            p.holder = s
+            p.holder_gen = gen
+            p.sb_refs.append(s)
+        s._plan = plan_list
+        s._members = members
+        refs[s] = n_members
+        self._sblocks[sid] = s
+        self._sblock_va_bytes += total_size
         self._maybe_stitch_free()
         return s
 
@@ -773,8 +1106,12 @@ class GMLakeAllocator:
         while self._sblock_va_bytes > self.sblock_va_budget and heap:
             last_use, sid = heappop(heap)
             s = sblocks.get(sid)
-            if s is None or s.active_members > 0 or s.last_use != last_use:
-                continue  # stale entry: destroyed, re-activated, or refreshed
+            if s is None:
+                continue  # stale entry: block destroyed
+            if s.heap_lu == last_use:
+                s.heap_lu = None  # its live entry just left the heap
+            if s.active_members > 0 or s.last_use != last_use:
+                continue  # stale entry: re-activated or refreshed
             self._destroy_sblock(s)
 
     def _destroy_sblock(self, s: SBlock) -> None:
@@ -782,28 +1119,71 @@ class GMLakeAllocator:
 
         Only fully-inactive sBlocks are ever destroyed, and an inactive
         sBlock cannot share a member with a *held* one (the shared member
-        would make it active) — so no held block's cached free plan can
-        reference this block, and the membership drop is a pure discard
-        sweep, run as one C-level map. Stale ``holder`` pointers at this
-        block are left in place: the generation test reads them as inactive
-        forever (the block's gen was bumped at its final free), and each
-        pBlock retains at most one dead holder, so the object graph stays
-        bounded.
+        would make it active) — so no held block's free plan can reference
+        this block, and the membership drop is a pure discard sweep, run as
+        one C-level map. Pooled frozen segments cache membership counts;
+        the dead block is appended to the dead-block log and purged from
+        each cached plan's Counter lazily, right before it is next trusted
+        (``_purge_refs``). Stale ``holder`` pointers at this block are left
+        in place: the generation test reads them as inactive forever (the
+        block's gen was bumped at its final free and only grows, even
+        across shell recycling). The shell itself parks on the free list
+        for ``_stitch_plan`` to reuse.
         """
-        if s.active_members == 0:
+        if s.pool_listed:
             self._inactive_s.remove(s)
+            s.pool_listed = False
         del self._sblocks[s.sid]
         self._sblock_va_bytes -= s.size
-        members = s.members()
+        members = s.members()  # resolves deferred splits; freshens n_members
         deque(
-            map(list.remove, [p.sb_sids for p in members], repeat(s.sid)),
+            map(list.remove, map(_get_sb_refs, members), repeat(s)),
             maxlen=0,
         )
+        self._dead_refs.append(s)
+        if len(self._dead_refs) > self.DEAD_LOG_LIMIT:
+            self._compact_dead_log()
         self.device.cu_mem_unmap(s.n_members)
         self.device.cu_mem_address_free()
+        shells = self._shells
+        if len(shells) < self.MAX_SHELLS:
+            s._members = None
+            s._plan = None
+            s._refs = None
+            s._chunks = None
+            s._extents = None
+            shells.append(s)
+
+    def _compact_dead_log(self) -> None:
+        """Reset the destroyed-block log so memory stays O(live), not
+        O(destroys).
+
+        The log exists only so *cached* (inactive, reconciled) plans can
+        replay destroys into their frozen Counters before the S1 fast path
+        trusts them. Dropping every inactive block's cached plan makes the
+        whole log dead weight: held/pending plans never contain dead
+        entries (their referencing blocks are active, hence undestroyable)
+        and get a fresh ``_refs_mark`` at their next reconcile, so the log
+        can be cleared outright. Cost: O(live sBlocks), amortized over the
+        4096 destroys that filled the log; the only effect on behaviour is
+        that the next re-hold of an affected block takes the slow path
+        once — which rebuilds the cache.
+        """
+        pending = self._pending_frees
+        for s in self._sblocks.values():
+            if s._plan is not None and not s.held and s not in pending:
+                s._plan = None
+                s._refs = None
+        self._dead_refs.clear()
 
     def _compact_lru_heap(self) -> None:
-        heap = [(s.last_use, s.sid) for s in self._inactive_s]
+        self._inactive_s.sweep()  # iteration must see only truly-inactive
+        for s in self._sblocks.values():
+            s.heap_lu = None
+        heap = []
+        for s in self._inactive_s:
+            s.heap_lu = s.last_use
+            heap.append((s.last_use, s.sid))
         heapify(heap)
         self._lru_heap = heap
 
@@ -841,29 +1221,33 @@ class GMLakeAllocator:
 
     def _take_stitch_candidates(
         self, bsize: int, include_sub: bool
-    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
+    ) -> Tuple[Dict[int, _Seg], int, Dict['SBlock', int], List[PBlock]]:
         """Remove and return the S3 candidate set, largest blocks first.
 
-        Walks pool buckets largest-size-first. A bucket consumed whole never
-        needs sorting at all (blocks of one size are interchangeable for
-        everything the digests pin — only the intra-stitch chunk layout
-        differs, which nothing downstream reads); the completing bucket
-        selects its k highest ids with one ``nlargest`` pass and leaves the
-        remainder as an unsorted pending run. Candidate *selection* — the
-        chosen id set and the identity of the block that gets split — is
-        exactly the id-ordered scheme's. Membership refcount deltas are
-        aggregated into one Counter pass. The Counter and the removed
-        bucket slices double as the eventual free plan (returned so
-        ``_stitch`` can cache them on the new sBlock — the pool
-        re-insertion at free reuses these very lists). The completing block
-        is split first when it would overshoot (and is at/above the frag
-        limit), exactly as the per-candidate scheme did.
+        Walks pool buckets largest-size-first, returning the candidates as
+        per-size segments (``plan``) plus the aggregated membership
+        refcount Counter and the member count. A bucket consumed whole
+        never needs sorting at all (blocks of one size are interchangeable
+        for everything the digests pin — only the intra-stitch chunk layout
+        differs, which nothing downstream reads); when the whole bucket is
+        exactly one frozen segment, the slice object is moved into the new
+        plan wholesale — no per-member list building (plan identity,
+        round 4). The completing bucket selects its k highest ids with one
+        sort over base-tail + unsettled inserts and, when the settled base
+        was exhausted, leaves the sorted remainder as the new settled
+        bucket — the per-size cursor consecutive same-size takes slice
+        without re-sorting. Candidate *selection* — the chosen id set and
+        the identity of the block that gets split — is exactly the
+        id-ordered scheme's. Membership refcounts for the whole candidate
+        set are counted in ONE C-level pass at the end and become the new
+        block's frozen free plan. The completing block is split first when
+        it would overshoot (and is at/above the frag limit), exactly as
+        the per-candidate scheme did.
         """
-        main = self._inactive_p.main
-        pools = (main, self._inactive_p.sub) if include_sub else (main,)
-        cb: List[PBlock] = []
-        segments: List[list] = []  # taken bucket slices, walk order
-        plan: Dict[int, list] = {}
+        pool_main = self._inactive_p.main
+        pools = (pool_main, self._inactive_p.sub) if include_sub else (pool_main,)
+        plan: Dict[int, _Seg] = {}
+        hotspots = self.hotspots
         total = 0
         split_last: Optional[PBlock] = None
         keep = 0
@@ -871,41 +1255,68 @@ class GMLakeAllocator:
         for pool in pools:
             sizes = pool._sizes
             buckets = pool._buckets
-            pending = pool._pending
+            loose_map = pool._loose
+            segs_map = pool._segs
             for si in range(len(sizes) - 1, -1, -1):
                 size = sizes[si]
                 bucket = buckets[size]
-                run = pending.pop(size, None)
-                n = len(bucket) + (len(run) if run is not None else 0)
+                loose = loose_map.pop(size, None)
+                segs = segs_map.pop(size, None)
+                n = len(bucket)
+                if loose is not None:
+                    n += len(loose)
+                if segs is not None:
+                    for g in segs:
+                        n += len(g.entries)
                 k = -(-(bsize - total) // size)  # blocks of `size` still needed
                 if k > n:  # take the whole bucket: no order needed
-                    if run is not None:
-                        bucket.extend(run)
                     del buckets[size]
                     sizes.pop(si)
-                    plan[size] = bucket  # the take owns the slice: reuse it
-                    segments.append(bucket)
                     pool._count -= n
                     pool.bytes -= size * n
                     total += size * n
+                    if segs is not None and not bucket and loose is None and len(segs) == 1:
+                        # plan identity: the bucket is exactly one frozen
+                        # slice — the list object moves into the new plan
+                        seg = segs[0]
+                        seg.gen += 1  # consumed: prior plan stamps go stale
+                        hotspots["seg_reuse"] += 1
+                    else:
+                        entries = bucket  # the take owns the base: reuse it
+                        if loose is not None:
+                            entries.extend(loose)
+                        if segs is not None:
+                            for g in segs:
+                                g.gen += 1
+                                entries.extend(g.entries)
+                        seg = _Seg(size, entries)
+                        hotspots["seg_recount"] += 1
+                    plan[size] = seg
                     continue
                 # This bucket completes the request: its k highest ids win.
                 # The winners can only be the sorted base's last k entries or
-                # pending inserts, so selection is O(k + |run|) — the bucket
-                # body is never scanned or sorted.
-                cand = bucket[-k:] + run if run is not None else bucket[-k:]
+                # unsettled inserts, so selection is O(k + inserts + sort) —
+                # the settled bucket body is never scanned or re-sorted.
+                unsettled = loose if loose is not None else []
+                if segs is not None:
+                    for g in segs:
+                        g.gen += 1  # partial consumption breaks the slices
+                        unsettled.extend(g.entries)
+                cand = bucket[-k:] + unsettled if unsettled else bucket[-k:]
                 del bucket[-k:]
-                if run is not None:
+                if unsettled:
                     cand.sort()
                 top = cand[-k:]  # ascending; top[0] is the lowest winner
-                rest = cand[:-k]  # candidate-window losers: back to pending
+                rest = cand[:-k]  # candidate-window losers
                 overshoot = total + size * k - bsize
+                extra_removed = 0
                 if overshoot and size >= self.frag_limit:
                     # the completing block — the lowest winner — is split to
-                    # fit. It stays pooled: _split removes it and re-adds
-                    # the halves itself.
+                    # fit after the walk: the first half joins the stitch,
+                    # the remainder half is pooled. The parent leaves the
+                    # pool here, with no re-pool round trip.
                     split_last = top[0][1]
-                    rest.append(top[0])
+                    extra_removed = 1
                     taken = top[1:]
                     k -= 1
                     keep = size - overshoot
@@ -914,64 +1325,81 @@ class GMLakeAllocator:
                     taken = top
                     total += size * k
                 if rest:
-                    pending[size] = rest  # unsorted; settled on next query
+                    if bucket:
+                        loose_map[size] = rest  # unsorted vs the settled base
+                    else:
+                        # the settled base is gone: the sorted remainder IS
+                        # the settled bucket (per-size cursor) — consecutive
+                        # same-size takes slice its tail with no sorting.
+                        bucket.extend(rest)
                 elif not bucket:
                     del buckets[size]
                     sizes.pop(si)
                 if k:
-                    plan[size] = taken
-                    segments.append(taken)
-                pool._count -= k
-                pool.bytes -= size * k
+                    plan[size] = _Seg(size, taken)
+                pool._count -= k + extra_removed
+                pool.bytes -= size * (k + extra_removed)
                 done = True
                 break
             if done:
                 break
         else:
             raise AssertionError("pool byte counter out of sync with contents")
-        for seg in segments:
-            cb += [e[1] for e in seg]
         if split_last is not None:
-            a, _b = self._split(split_last, keep)
-            self._inactive_p.remove(a)
-            cb.append(a)
-            entries = plan.get(a.size)
-            if entries is None:
-                plan[a.size] = [(a.pid, a)]
+            a, b = self._split_parts(split_last, keep)
+            self._inactive_p.add(b)
+            entry = (a.pid, a)
+            seg = plan.get(a.size)
+            if seg is None:
+                plan[a.size] = _Seg(a.size, [entry])
             else:
-                entries.append((a.pid, a))
+                seg.entries.append(entry)
             total += keep
-        refs = Counter(chain.from_iterable(map(_get_sb_sids, cb)))
+        # flatten the candidate set once — the take, the refcount pass and
+        # the stitch all share this list — then ONE aggregated C-level
+        # count of the flat membership arrays, applied as one batch. The
+        # counts become the new block's frozen free-plan refs.
+        members: List[PBlock] = []
+        edges: List[SBlock] = []
+        ma = members.append
+        for seg in plan.values():
+            for e in seg.entries:
+                p = e[1]
+                ma(p)
+                edges += p.sb_refs
+        refs: Dict[SBlock, int] = {}
+        _count_elements(refs, edges)
         self._apply_activation(refs)
-        return cb, total, refs, plan
+        return plan, total, refs, members
 
     def _take_all(
         self, include_sub: bool
-    ) -> Tuple[List[PBlock], int, Counter, Dict[int, list]]:
-        """Drain the stitchable pool(s) for S4, largest blocks first."""
-        main = self._inactive_p.main
-        pools = (main, self._inactive_p.sub) if include_sub else (main,)
-        cb: List[PBlock] = []
-        plan: Dict[int, list] = {}
+    ) -> Tuple[Dict[int, _Seg], int, Dict['SBlock', int], List[PBlock]]:
+        """Drain the stitchable pool(s) for S4."""
+        pool_main = self._inactive_p.main
+        pools = (pool_main, self._inactive_p.sub) if include_sub else (pool_main,)
+        plan: Dict[int, _Seg] = {}
+        refs: Dict[SBlock, int] = {}
+        members: List[PBlock] = []
         total = 0
         for pool in pools:
             for size in reversed(pool._sizes):
                 bucket = pool._settled(size)
-                cb += [e[1] for e in reversed(bucket)]
                 total += size * len(bucket)
-                plan[size] = bucket  # main/sub sizes are disjoint partitions
+                members += [e[1] for e in bucket]
+                _count_entry_sids(refs, bucket)
+                # main/sub sizes are disjoint partitions: no key collisions
+                plan[size] = _Seg(size, bucket)
             pool._buckets = {}
-            pool._pending.clear()
+            pool._loose.clear()
+            pool._segs.clear()
             pool._sizes.clear()
             pool._count = 0
             pool.bytes = 0
-        refs = Counter(chain.from_iterable(map(_get_sb_sids, cb)))
         self._apply_activation(refs)
-        return cb, total, refs, plan
+        return plan, total, refs, members
 
-    # ------------------------------------------------------------------
-    # allocation strategy (paper Fig. 9)
-    # ------------------------------------------------------------------
+
     def malloc(self, size: int) -> Allocation:
         """Allocate ``size`` bytes (paper Fig. 9 / Algorithm 1).
 
@@ -1041,35 +1469,31 @@ class GMLakeAllocator:
             return a
 
         if state == 3:
-            cb, total, refs, plan = self._take_stitch_candidates(bsize, include_sub)
-            if len(cb) == 1:  # degenerate after split: a plain pBlock handout
-                cb[0].direct = True
-                return cb[0]
-            return self._stitch(
-                cb, total_size=total, active_members=len(cb),
-                hold=True, refs=refs, plan=plan,
+            plan, total, refs, members = self._take_stitch_candidates(
+                bsize, include_sub
             )
+            if len(members) == 1:  # degenerate after split: plain pBlock handout
+                p = members[0]
+                p.direct = True
+                return p
+            return self._stitch_plan(plan, total, refs, members)
 
         # state == 4: insufficient inactive blocks -> Alloc new physical memory
         new_p = self._alloc_new(bsize - avail)  # raises DeviceOOM -> S5 upstream
         if avail == 0:
             return new_p
-        cb, total, refs, plan = self._take_all(include_sub)
+        plan, total, refs, members = self._take_all(include_sub)
         assert total == avail, "pool byte counter out of sync with contents"
         new_p.direct = False  # joins the stitch as a generation-stamped member
-        entries = plan.get(new_p.size)
-        if entries is None:
-            plan[new_p.size] = [(new_p.pid, new_p)]
+        seg = plan.get(new_p.size)
+        entry = (new_p.pid, new_p)
+        if seg is None:
+            plan[new_p.size] = _Seg(new_p.size, [entry])
         else:
-            entries.append((new_p.pid, new_p))
-        return self._stitch(
-            cb + [new_p],
-            total_size=total + new_p.size,
-            active_members=len(cb) + 1,
-            hold=True,
-            refs=refs,
-            plan=plan,
-        )
+            seg.entries.append(entry)
+        members.append(new_p)
+        # new_p is fresh: its sb_refs are empty, no refs contribution
+        return self._stitch_plan(plan, total + new_p.size, refs, members)
 
     # ------------------------------------------------------------------
     # deallocation: Update (no physical free)
@@ -1121,17 +1545,64 @@ class GMLakeAllocator:
     def check_invariants(self) -> None:
         """Validate every structural invariant (test/debug only; O(blocks)).
 
-        Reconciles pending frees first — reconciliation timing is
-        unobservable to callers, so this never perturbs replay behaviour.
-        The invariants below are the ones the golden-digest tests pin:
-        pools hold exactly the inactive blocks, refcounts and byte totals
-        match ground truth recomputed from members, position maps agree
-        with slot contents, and every inactive sBlock is LRU-reachable.
+        Verifies the round-4 frozen-segment invariants first (a frozen
+        segment's cached Counter must equal a fresh count of its members'
+        sid arrays — the property that makes plan-identity reuse
+        bit-identical), then reconciles pending frees and checks the
+        classic pool/refcount/LRU invariants. Reconciliation timing is
+        unobservable to callers, so this never perturbs replay behaviour
+        (the settle it forces kills frozen segments, which only disables
+        reuse — never changes outcomes).
         """
+        # held / pending-free blocks: plans attached, owned, and exact
+        for s in self._sblocks.values():
+            if s.held or s in self._pending_frees:
+                assert s._plan is not None, "held stitched block without a plan"
+                members = s.members()
+                plan_n = sum(len(seg.entries) for seg, _g in s._plan)
+                assert plan_n == len(members)
+                plan_pids = {e[0] for seg, _g in s._plan for e in seg.entries}
+                assert plan_pids == {p.pid for p in members}
+                truth: Dict[SBlock, int] = {}
+                for seg, gen in s._plan:
+                    assert seg.owner is s
+                    assert seg.gen == gen, "plan generation drifted while held"
+                    assert all(e[1].size == seg.size for e in seg.entries)
+                    _count_entry_sids(truth, seg.entries)
+                assert dict(s._refs) == truth, "frozen plan refs drifted"
+        # inactive cached plans: when every generation still matches (the
+        # S1 fast path would fire), the cached Counter must equal a fresh
+        # count after the dead-log replay — the plan-identity soundness
+        # property itself
+        for s in self._sblocks.values():
+            plan = s._plan
+            if (
+                plan is not None and not s.held
+                and s not in self._pending_frees
+                and all(seg.gen == g and seg.owner is None for seg, g in plan)
+                and sum(len(seg.entries) for seg, _g in plan) == len(s.members())
+            ):
+                self._purge_refs(s)
+                truth = {}
+                for seg, _g in plan:
+                    _count_entry_sids(truth, seg.entries)
+                assert dict(s._refs) == truth, "cached plan refs drifted"
+        # pooled frozen segments: unowned and sized right
+        for pool in (self._inactive_p.main, self._inactive_p.sub, self._inactive_s):
+            for size, segs in pool._segs.items():
+                for seg in segs:
+                    assert seg.size == size
+                    assert seg.owner is None
+                    for pid, p in seg.entries:
+                        assert p.pid == pid and p.size == size
+                        assert p.split_into is None, "split inside frozen slice"
+
         self._reconcile()
+        self._inactive_s.sweep()  # drop lazily-delisted (stale) entries
         seen_chunks: Dict[int, int] = {}
         inactive_ids = {p.pid for p in self._inactive_p}
         for p in self._pblocks.values():
+            assert p.split_into is None, "split parent still registered"
             for c in p.chunks:
                 assert c not in seen_chunks, f"chunk {c} owned by two pBlocks"
                 seen_chunks[c] = p.pid
@@ -1143,10 +1614,6 @@ class GMLakeAllocator:
             members = s.members()
             assert s.size == sum(p.size for p in members)
             assert s.n_members == len(members)
-            if s.slots is not None:  # materialized by a split substitution
-                assert s.pos == {
-                    p.pid: j for j, slot in enumerate(s.slots) for p in slot
-                }
             assert s.active_members == sum(1 for p in members if p.active)
             assert s.active == (s.active_members > 0)
             if s.held:  # held: every member stamped with the current gen
@@ -1157,8 +1624,8 @@ class GMLakeAllocator:
             if not s.active:  # every inactive sBlock is reachable by StitchFree
                 assert (s.last_use, s.sid) in lru_entries
             for p in members:
-                assert s.sid in p.sb_sids
-                assert p.sb_sids.count(s.sid) == 1
+                assert s in p.sb_refs
+                assert p.sb_refs.count(s) == 1
                 assert p.pid in self._pblocks
         assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
         assert self._sblock_va_bytes == sum(s.size for s in self._sblocks.values())

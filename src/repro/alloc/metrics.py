@@ -26,6 +26,10 @@ class AllocatorStats:
     # timeline: (event index, active, reserved) triples for trace plots
     timeline: List[tuple] = field(default_factory=list)
     record_timeline: bool = False
+    #: backend-specific diagnostic counters (e.g. GMLake's round-4 fast-path
+    #: hit tallies: seg_reuse / hold_fast / shell_reuse). Never part of the
+    #: golden digests — purely observability for the profile harness.
+    counters: Optional[dict] = None
 
     def __post_init__(self) -> None:
         # on_alloc/on_free run once per replayed event; when no timeline is

@@ -181,27 +181,15 @@ class _SpanAllocator:
             spans.pop()
 
 
-def build_plan(trace, granularity: int = MIN_BLOCK_SIZE) -> PlacementPlan:
-    """The offline spatio-temporal planning pass (see module docstring)."""
-    t0 = time.perf_counter()
-    events = getattr(trace, "events", trace)
-    starts, ends, sizes = _profile_intervals(events, granularity)
-    n_events = len(events)
+def _place_event_order(starts, ends, sizes, n_events, static_top):
+    """Arrival-order best-fit placement with known lifetimes (round 3).
 
-    # static region: intervals alive at end-of-trace stack at the bottom in
-    # arrival order. They can never be freed mid-run, so nothing above them
-    # ever has to route around a hole they leave.
-    offsets: List[int] = [0] * len(starts)
-    static_top = 0
-    for j, end in enumerate(ends):
-        if end >= n_events:
-            offsets[j] = static_top
-            static_top += sizes[j]
-
-    # transient region: replay the interval endpoints in event order
-    # through best-fit placement with known lifetimes. Each event index is
-    # one alloc or one free, and ``starts`` is ascending by construction,
-    # so a single merged sweep visits every endpoint in trace order.
+    Replays the interval endpoints in event order through best-fit over
+    free spans. Each event index is one alloc or one free, and ``starts``
+    is ascending by construction, so a single merged sweep visits every
+    endpoint in trace order. Returns (offsets-for-transients, capacity).
+    """
+    offsets = [0] * len(starts)
     sim = _SpanAllocator(static_top)
     frees_at: Dict[int, int] = {}  # free-event index -> request index
     for j, end in enumerate(ends):
@@ -217,9 +205,102 @@ def build_plan(trace, granularity: int = MIN_BLOCK_SIZE) -> PlacementPlan:
             if ends[k] < n_events:
                 offsets[k] = sim.alloc(sizes[k])
             k += 1
+    return offsets, sim.peak
+
+
+#: Above this many transient intervals the O(n^2) size-ordered placement
+#: is skipped (arrival-order best-fit alone): the quadratic pass costs
+#: minutes at ~60k intervals for marginal gains on churn-heavy traces.
+SIZE_ORDERED_MAX_INTERVALS = 20_000
+
+
+def _place_size_ordered(starts, ends, sizes, n_events, static_top):
+    """Size-ordered offset assignment (round 4; the planning literature's
+    classic DSA heuristic): place large intervals first, each at the lowest
+    offset that is free across its whole lifetime.
+
+    Arrival-order placement lets early small tensors claim low offsets and
+    forces later large ones to stack above them; placing by descending size
+    (ties broken by arrival, for determinism) lets the big intervals sit
+    low and the small ones fill lifetime-disjoint holes around them — this
+    is what cuts the training traces' planned fragmentation (BENCHMARKS.md
+    §5.1). The per-interval scan is first-fit over the offset-sorted set of
+    lifetime-overlapping placements — O(n^2) worst case, so callers skip it
+    past ``SIZE_ORDERED_MAX_INTERVALS``. Returns (offsets, capacity).
+    """
+    offsets = [0] * len(starts)
+    order = sorted(
+        (j for j in range(len(starts)) if ends[j] < n_events),
+        key=lambda j: (-sizes[j], j),
+    )
+    placed_s: List[int] = []
+    placed_e: List[int] = []
+    placed_off: List[int] = []
+    placed_sz: List[int] = []
+    peak = static_top
+    for j in order:
+        s, e, sz = starts[j], ends[j], sizes[j]
+        overlaps = sorted(
+            (placed_off[i], placed_sz[i])
+            for i in range(len(placed_s))
+            if placed_s[i] < e and s < placed_e[i]
+        )
+        off = static_top
+        for po, psz in overlaps:
+            if off + sz <= po:
+                break  # the gap below this placement fits
+            top = po + psz
+            if top > off:
+                off = top
+        offsets[j] = off
+        placed_s.append(s)
+        placed_e.append(e)
+        placed_off.append(off)
+        placed_sz.append(sz)
+        if off + sz > peak:
+            peak = off + sz
+    return offsets, peak
+
+
+def build_plan(trace, granularity: int = MIN_BLOCK_SIZE) -> PlacementPlan:
+    """The offline spatio-temporal planning pass (see module docstring).
+
+    Runs BOTH transient placements — arrival-order best-fit and
+    size-ordered first-fit — and keeps whichever needs the smaller arena
+    (size-ordered wins ties); the plan is offline, so trying both costs
+    nothing on the replay path.
+    """
+    t0 = time.perf_counter()
+    events = getattr(trace, "events", trace)
+    starts, ends, sizes = _profile_intervals(events, granularity)
+    n_events = len(events)
+
+    # static region: intervals alive at end-of-trace stack at the bottom in
+    # arrival order. They can never be freed mid-run, so nothing above them
+    # ever has to route around a hole they leave.
+    static_offsets: List[int] = [0] * len(starts)
+    static_top = 0
+    for j, end in enumerate(ends):
+        if end >= n_events:
+            static_offsets[j] = static_top
+            static_top += sizes[j]
+
+    ev_offsets, ev_cap = _place_event_order(starts, ends, sizes, n_events, static_top)
+    n_transient = sum(1 for end in ends if end < n_events)
+    if n_transient <= SIZE_ORDERED_MAX_INTERVALS:
+        so_offsets, so_cap = _place_size_ordered(
+            starts, ends, sizes, n_events, static_top
+        )
+    else:  # quadratic pass intractable: keep the arrival-order plan
+        so_offsets, so_cap = ev_offsets, ev_cap
+    offsets = so_offsets if so_cap <= ev_cap else ev_offsets
+    capacity = min(so_cap, ev_cap)
+    for j, end in enumerate(ends):  # statics share both placements' bottom
+        if end >= n_events:
+            offsets[j] = static_offsets[j]
 
     return PlacementPlan(
-        capacity=sim.peak,
+        capacity=capacity,
         offsets=tuple(offsets),
         sizes=tuple(sizes),
         static_bytes=static_top,

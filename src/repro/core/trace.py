@@ -28,10 +28,11 @@ and smaller allocations => fragmentation for the splitting allocator.
 from __future__ import annotations
 
 import itertools
+import json
 import random
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from ..alloc import registry as _registry
 from ..alloc.caching_allocator import AllocatorOOM
@@ -115,6 +116,48 @@ class Trace:
             labels.append(e.label)
         self._compiled = (ops, tids, sizes, labels, len(self.events))
         return ops, tids, sizes, labels
+
+    # -- persistence --------------------------------------------------------
+    def to_jsonable(self) -> dict:
+        """Columnar JSON form (compact, diff-friendly, replayable).
+
+        Recorded engine traces are checked into the repo in this format so
+        the golden/bench suites can replay real framework event streams
+        without re-running the engine (or needing jax at test time).
+        """
+        ops, tids, sizes, labels = self.compiled()
+        return {
+            "format": "repro.trace.v1",
+            "meta": self.meta,
+            "ops": ops,
+            "tids": tids,
+            "sizes": sizes,
+            "labels": labels,
+        }
+
+    @classmethod
+    def from_jsonable(cls, payload: dict) -> "Trace":
+        if payload.get("format") != "repro.trace.v1":
+            raise ValueError(f"not a repro trace payload: {payload.get('format')!r}")
+        op_names = {v: k for k, v in _OP_CODES.items()}
+        events = [
+            TraceEvent(op_names[op], tid, size, label)
+            for op, tid, size, label in zip(
+                payload["ops"], payload["tids"], payload["sizes"], payload["labels"]
+            )
+        ]
+        return cls(events=events, meta=dict(payload.get("meta", {})))
+
+    def save(self, path: Union[str, "os.PathLike"]) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_jsonable(), f, separators=(",", ":"))
+            f.write("\n")
+
+
+def load_trace(path) -> Trace:
+    """Load a checked-in ``Trace`` (see ``Trace.save``/``to_jsonable``)."""
+    with open(path) as f:
+        return Trace.from_jsonable(json.load(f))
 
 
 class TraceRecorder:
@@ -513,6 +556,9 @@ def replay(
     malloc = allocator.malloc
     free = allocator.free
     live_pop = live.pop
+    # the S1-S5 counter dict never changes identity mid-replay: resolve it
+    # once instead of a getattr per mark event (round 4)
+    state_counts = getattr(allocator, "state_counts", None)
     check = check_invariants_every
     i = 0
     t0 = time.perf_counter()
@@ -529,8 +575,9 @@ def replay(
                         if alloc is not None:  # may have been dropped after OOM
                             free(alloc)
                     else:
-                        counts = getattr(allocator, "state_counts", None)
-                        marks.append((ev.label, dict(counts) if counts else {}))
+                        marks.append(
+                            (ev.label, dict(state_counts) if state_counts else {})
+                        )
                     if i % check == 0:
                         allocator.check_invariants()
                     i += 1
@@ -545,8 +592,9 @@ def replay(
                         if alloc is not None:
                             free(alloc)
                     else:
-                        counts = getattr(allocator, "state_counts", None)
-                        marks.append((ev.label, dict(counts) if counts else {}))
+                        marks.append(
+                            (ev.label, dict(state_counts) if state_counts else {})
+                        )
                     i += 1
         except AllocatorOOM:
             oom = True
@@ -587,6 +635,7 @@ def replay_batched(
     malloc = allocator.malloc
     free = allocator.free
     live_pop = live.pop
+    state_counts = getattr(allocator, "state_counts", None)
     i = 0
     stop = False
     t0 = time.perf_counter()
@@ -604,8 +653,9 @@ def replay_batched(
                     if alloc is not None:
                         free(alloc)
                 else:
-                    counts = getattr(allocator, "state_counts", None)
-                    marks.append((labels[i], dict(counts) if counts else {}))
+                    marks.append(
+                        (labels[i], dict(state_counts) if state_counts else {})
+                    )
                 i += 1
         except AllocatorOOM:
             oom = True

@@ -21,6 +21,8 @@ The parametrization resolves backends through the registry-key replay path
 device construction, and planning-backend ``prepare`` are covered too.
 """
 
+from pathlib import Path
+
 import pytest
 
 from repro.alloc import registry
@@ -34,6 +36,16 @@ from repro.core import (
     training_trace,
 )
 from repro.core.gmlake import GMLakeAllocator
+from repro.core.trace import load_trace
+
+#: Real ServeEngine-recorded stream (fixed seed; see
+#: examples/record_engine_trace.py). All KV allocations are single-chunk
+#: (2 MB) grows, so gmlake's path mix is S1-dominant — the
+#: free-then-retake-at-the-same-size-class pattern the round-4
+#: plan-identity fast path targets.
+ENGINE_TRACE_PATH = (
+    Path(__file__).parent / "data" / "serve_engine_smollm.trace.json"
+)
 
 # (trace key, allocator backend, capacity GB) -> pinned digest.
 # state_counts is None for backends without Algorithm-1 state tracking.
@@ -104,30 +116,55 @@ GOLDEN = {
         oom=True, oom_at_event=7, n_alloc=7, n_free=0,
     ),
     # -- stalloc: planned peak beats caching on every trace; reserved is
-    # the plan's single upfront arena (paper §5.1 fragmentation framing:
-    # train 7.4% / 3.9% / serve 14.9% vs caching's 31 / 34 / 63%) --------
+    # the plan's single upfront arena. Round-4 size-ordered offset
+    # assignment (place large intervals first) cut planned fragmentation
+    # to train 0.7% / 0.7% / serve 14.5% (was 7.4 / 3.9 / 14.9; caching:
+    # 31 / 34 / 63%) — see BENCHMARKS.md §5.1 ---------------------------
     ("train_opt13b_LRO", "stalloc", 80): dict(
-        state_counts=None, peak_active=20028047360, peak_reserved=21632368640,
+        state_counts=None, peak_active=20028047360, peak_reserved=20164362240,
         oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
     ),
-    # 20 GB device: the 21.6 GB plan cannot be reserved at all — the
-    # planner fails fast at the first planned request (contrast: caching
-    # strands its way to an OOM at event 12746, gmlake completes)
+    # 20 GB device: the round-3 arrival-order plan needed 21.6 GB and
+    # failed fast here; the size-ordered plan fits in 18.8 GB, so the
+    # planner now completes the trace a 20 GB device (like gmlake, and
+    # unlike caching which strands its way to an OOM at event 12746)
     ("train_opt13b_LRO", "stalloc", 20): dict(
-        state_counts=None, peak_active=0, peak_reserved=0,
-        oom=True, oom_at_event=0, n_alloc=0, n_free=0,
+        state_counts=None, peak_active=20028047360, peak_reserved=20164362240,
+        oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
     ),
     ("train_opt1.3b_LR", "stalloc", 80): dict(
-        state_counts=None, peak_active=7302905856, peak_reserved=7600701440,
+        state_counts=None, peak_active=7302905856, peak_reserved=7357431808,
         oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
     ),
     ("serve_vicuna", "stalloc", 80): dict(
-        state_counts=None, peak_active=24018124800, peak_reserved=28214067200,
+        state_counts=None, peak_active=24018124800, peak_reserved=28092825600,
         oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
     ),
     ("serve_vicuna", "stalloc", 16): dict(
         state_counts=None, peak_active=0, peak_reserved=0,
         oom=True, oom_at_event=0, n_alloc=0, n_free=0,
+    ),
+    # -- real engine-recorded serving trace (uniform 2 MB KV grows):
+    # gmlake converges to S1 re-holds of previously-freed stitches --------
+    ("serve_engine_smollm", "caching", 2): dict(
+        state_counts=None,
+        peak_active=100663296, peak_reserved=104857600,
+        oom=False, oom_at_event=None, n_alloc=288, n_free=288,
+    ),
+    ("serve_engine_smollm", "native", 2): dict(
+        state_counts=None,
+        peak_active=100663296, peak_reserved=100663296,
+        oom=False, oom_at_event=None, n_alloc=288, n_free=288,
+    ),
+    ("serve_engine_smollm", "gmlake", 2): dict(
+        state_counts={"S1": 240, "S2": 0, "S3": 0, "S4": 48, "S5": 0},
+        peak_active=100663296, peak_reserved=100663296,
+        oom=False, oom_at_event=None, n_alloc=288, n_free=288,
+    ),
+    ("serve_engine_smollm", "stalloc", 2): dict(
+        state_counts=None,
+        peak_active=100663296, peak_reserved=100663296,
+        oom=False, oom_at_event=None, n_alloc=288, n_free=288,
     ),
 }
 
@@ -152,6 +189,8 @@ def _trace(key):
         )
     if key == "serve_vicuna":
         return inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=2000, seed=0)
+    if key == "serve_engine_smollm":
+        return load_trace(ENGINE_TRACE_PATH)
     raise KeyError(key)
 
 
