@@ -1,0 +1,168 @@
+"""Fault-injection / staged-recovery benchmark: the robustness numbers.
+
+Three question this answers, one row group each:
+
+  * **seeded recovery** — replay the recorded serving trace through each
+    recovery-capable backend over a ``FaultInjector`` running a seeded
+    hostile schedule (scattered transient ``cuMemCreate`` failures plus
+    one mid-trace capacity shrink). Reports host µs/event with the
+    ladder engaged and, as the headline (``derived``), how many faults
+    the ladder absorbed (``recovered``). ``unrecovered`` must stay 0 and
+    ``oom`` False — CI's smoke run fails otherwise.
+  * **fault-free overhead** — A/B of the same trace with and without the
+    recovery path compiled in (``recovery=True`` over a plain device).
+    ``derived`` is 1.0 iff the golden digest is bit-identical (the
+    ladder must be free when nothing fails); ``extra`` carries the wall
+    delta, which is noise-level by construction.
+  * **kill/recover scenario** (skipped under ``--fast``) — the full
+    serving scenario from ``repro.serve.killrecover``: capacity loss +
+    burst -> AllocatorOOM -> supervisor restore -> tight rebuild ->
+    drain. ``derived`` is requests finished; metrics carry restart and
+    recovery counters.
+
+Emits ``BENCH_faults.json`` (schema in BENCHMARKS.md) for the CI
+artifact trail.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.alloc import GB, MB, FaultSchedule, VMMDevice, registry
+from repro.core import PAPER_MODELS, replay, training_trace
+from repro.core.trace import load_trace
+
+from .common import Row, emit, emit_json
+
+SMOLLM_TRACE_PATH = (
+    Path(__file__).resolve().parent.parent
+    / "tests" / "data" / "serve_engine_smollm.trace.json"
+)
+
+#: Per-backend seeded schedules, calibrated to each backend's device-call
+#: granularity (gmlake creates per 2 MB pBlock; caching reserves 20 MB
+#: segments, so it needs a denser failure rate to see any faults at all).
+#: Same schedules the conformance suite pins (test_alloc_protocol.py).
+SCHEDULES = {
+    "gmlake": FaultSchedule(seed=3, create_fail_prob=0.1, burst=2,
+                            shrink_at_call=20, shrink_bytes=64 * MB),
+    "caching": FaultSchedule(seed=0, create_fail_prob=0.5, burst=2,
+                             shrink_at_call=3, shrink_bytes=64 * MB),
+}
+
+
+def _digest(res):
+    return (res.state_counts, res.stats.peak_active, res.stats.peak_reserved,
+            res.oom, res.oom_at_event, res.stats.n_alloc, res.stats.n_free)
+
+
+def _seeded_rows(names: Sequence[str]) -> List[Row]:
+    trace = load_trace(SMOLLM_TRACE_PATH)
+    n_events = len(trace.events)
+    rows = []
+    for name in names:
+        sched = SCHEDULES.get(name)
+        if sched is None:  # no calibrated schedule for this backend
+            continue
+        res, _ = replay(trace, name, capacity_bytes=256 * MB,
+                        fault_schedule=sched)
+        counts = (res.recovery or {}).get("counts", {})
+        rows.append(Row(
+            f"seeded_recovery/{name}",
+            res.wall_seconds / n_events * 1e6,
+            counts.get("recovered", 0),
+            f"unrecovered:{counts.get('unrecovered', 0)} oom:{res.oom}",
+            metrics={
+                "oom": res.oom,
+                "model_cost": res.model_cost,
+                "recovery_counts": counts,
+            },
+        ))
+    return rows
+
+
+def _overhead_rows(names: Sequence[str], fast: bool) -> List[Row]:
+    iters = 2 if fast else 4
+    trace = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=iters
+    )
+    n_events = len(trace.events)
+    rows = []
+    for name in names:
+        base, _ = replay(trace, name)
+        forced = registry.create(name, VMMDevice(40 * GB), recovery=True)
+        armed, _ = replay(trace, forced)
+        identical = _digest(armed) == _digest(base)
+        delta = (armed.wall_seconds - base.wall_seconds) / base.wall_seconds
+        rows.append(Row(
+            f"fault_free_overhead/{name}",
+            armed.wall_seconds / n_events * 1e6,
+            1.0 if identical else 0.0,
+            f"wall_delta:{delta * 100:+.1f}% digest:"
+            + ("identical" if identical else "DIVERGED"),
+            metrics={"digest_identical": identical,
+                     "recovery_events": len(forced.event_log)},
+        ))
+    return rows
+
+
+def _scenario_rows(names: Sequence[str]) -> List[Row]:
+    import tempfile
+
+    from repro.serve.killrecover import KillRecoverConfig, run_scenario
+
+    rows = []
+    for name in names:
+        t0 = time.perf_counter()
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            out = run_scenario(KillRecoverConfig.for_backend(name), ckpt_dir)
+        wall = time.perf_counter() - t0
+        rep = out["memory_report"]
+        counts = (rep.get("recovery_events") or {}).get("counts", {})
+        rows.append(Row(
+            f"kill_recover/{name}",
+            wall * 1e6 / max(out["engine"].steps, 1),
+            out["finished"],
+            f"restarts:{out['restarts']} drained:{out['drained']}",
+            metrics={
+                "requests": out["requests"],
+                "restarts": out["restarts"],
+                "drained": out["drained"],
+                "recovery_counts": counts,
+                "injected_faults": rep.get("injected_faults", {}),
+            },
+        ))
+    return rows
+
+
+def run(fast: bool = False,
+        allocators: Optional[Sequence[str]] = None) -> None:
+    recovering = registry.with_capability("recovery")
+    names = [n for n in (allocators or recovering) if n in recovering]
+    rows = _seeded_rows(names) + _overhead_rows(names, fast)
+    if not fast:
+        rows += _scenario_rows([n for n in names if n in SCHEDULES])
+    emit(rows, "faults: us/event under seeded schedule, derived = "
+               "recovered count / digest match / requests finished")
+    bad = [r.name for r in rows
+           if r.metrics and (r.metrics.get("oom")
+                             or r.metrics.get("digest_identical") is False
+                             or r.metrics.get("drained") is False)]
+    payload = {
+        "benchmark": "faults",
+        "fast": fast,
+        "allocators": list(names),
+        "unit": {
+            "us_per_call": "host microseconds per event (per engine step "
+                           "for kill_recover rows)",
+            "derived": "recovered faults / digest match (1.0) / "
+                       "requests finished",
+        },
+        "rows": [r.as_dict() for r in rows],
+        "failures": bad,
+    }
+    emit_json("faults", payload)
+    if bad:
+        raise SystemExit(f"fault bench failures: {', '.join(bad)}")

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived[,extra]`` CSV per row. Modules:
     trace          Fig 14    (memory timeline + S1 convergence)
     serving        beyond-paper: stitched KV arena under churn
     replay         host-side replay throughput (events/sec + BENCH_replay.json)
+    faults         robustness: seeded recovery + fault-free overhead A/B +
+                   kill/recover scenario (BENCH_faults.json)
     profile        deterministic serving-replay hotspot terms (BENCH_profile.json)
     roofline       assignment: dry-run roofline table
 
@@ -59,6 +61,7 @@ def main() -> None:
     from . import (
         bench_alloc_latency,
         bench_end2end,
+        bench_faults,
         bench_platforms,
         bench_profile,
         bench_replay_throughput,
@@ -78,6 +81,7 @@ def main() -> None:
         "trace": bench_trace,
         "serving": bench_serving,
         "replay": bench_replay_throughput,
+        "faults": bench_faults,
         "profile": bench_profile,
         "roofline": roofline_all,
     }

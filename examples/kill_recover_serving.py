@@ -1,0 +1,86 @@
+"""Record the kill/recover serving scenario as a checked-in golden trace.
+
+Companion to ``record_engine_trace.py`` for the robustness path: a
+fixed-seed ``ServeEngine`` run over a fault-injected device where a
+mid-trace capacity shrink plus a transient ``cuMemCreate`` failure burst
+exhausts the allocator's recovery ladder, the ``Supervisor`` restores the
+last committed checkpoint, and ``load_state`` re-stitches the KV working
+set tight on the shrunken device before the workload drains. The
+recorded ``TraceRecorder`` stream (including the ``engine.restore@N``
+marks and the free/re-alloc churn of the rebuild) is saved in the
+columnar ``repro.trace.v1`` JSON format:
+
+    PYTHONPATH=src python examples/kill_recover_serving.py \
+        [--backend gmlake] [--out tests/data/serve_engine_killrecover.trace.json]
+
+The checked-in copy is what ``tests/test_golden_equivalence.py`` pins
+per-backend digests against. Re-running with unchanged defaults
+reproduces it byte-for-byte on the same jax version (model numerics feed
+admission/retirement order), which is why the artifact is committed
+rather than regenerated in CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.serve.killrecover import KillRecoverConfig, run_scenario  # noqa: E402
+
+
+def record(backend: str = "gmlake", seed: int = 0):
+    cfg = KillRecoverConfig.for_backend(backend, seed=seed)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        out = run_scenario(cfg, ckpt_dir)
+    if not out["drained"] or out["finished"] != cfg.requests:
+        raise RuntimeError(
+            f"scenario did not finish: {out['finished']}/{cfg.requests} "
+            f"(drained={out['drained']})"
+        )
+    eng = out["engine"]
+    trace = eng.recorder.trace
+    trace.meta.update(
+        scenario="kill_recover",
+        backend=backend,
+        seed=seed,
+        requests=cfg.requests,
+        max_new=cfg.max_new,
+        fault_call=cfg.fault_call,
+        fail_burst=cfg.fail_burst,
+        shrink_mb=cfg.shrink_mb,
+        restarts=out["restarts"],
+        recovery=out["memory_report"]["recovery_events"],
+        injected=out["memory_report"]["injected_faults"],
+    )
+    return trace, out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--out",
+        default=str(
+            Path(__file__).resolve().parent.parent
+            / "tests" / "data" / "serve_engine_killrecover.trace.json"
+        ),
+    )
+    ap.add_argument("--backend", default="gmlake")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    trace, out = record(args.backend, args.seed)
+    path = Path(args.out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    trace.save(path)
+    print(
+        f"recorded {len(trace.events)} events "
+        f"({trace.n_allocs} allocs, {out['restarts']} restarts, "
+        f"{out['finished']}/{out['requests']} finished) -> {path}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,12 @@
 Layout (bottom-up):
 
   chunks             device model: 2 MB physical chunks, extents, the
-                     VMM API cost ledger (paper Table 1 / Fig. 6)
-  metrics            AllocatorStats / ReplayResult / fragmentation math
+                     VMM API cost ledger (paper Table 1 / Fig. 6), and the
+                     seed-scheduled FaultInjector / capacity-shrink model
+  metrics            AllocatorStats / ReplayResult / AllocatorEventLog /
+                     fragmentation math
+  recovery           the staged OOM-recovery ladder shared by backends
+                     (release caches -> evict VA -> drain unmaps -> retry)
   protocol           AllocatorProtocol + AllocatorCapabilities: the one
                      contract every backend implements
   registry           string-keyed backend registry; ``registry.names()``
@@ -34,6 +38,9 @@ from .chunks import (
     SMALL_ALLOC_LIMIT,
     DeviceOOM,
     Extent,
+    FaultInjector,
+    FaultSchedule,
+    TransientDeviceError,
     VMMCostLedger,
     VMMDevice,
     num_chunks,
@@ -42,8 +49,14 @@ from .chunks import (
     round_up,
     unpack_extents,
 )
-from .metrics import AllocatorStats, ReplayResult, mem_reduction_ratio
+from .metrics import (
+    AllocatorEventLog,
+    AllocatorStats,
+    ReplayResult,
+    mem_reduction_ratio,
+)
 from .protocol import AllocatorCapabilities, AllocatorProtocol
+from .recovery import RecoveryConfig, recovery_enabled, run_ladder
 
 # backend modules self-register on import; import order fixes the
 # registry's (stable) iteration order
@@ -65,6 +78,9 @@ __all__ = [
     "SMALL_ALLOC_LIMIT",
     "DeviceOOM",
     "Extent",
+    "FaultInjector",
+    "FaultSchedule",
+    "TransientDeviceError",
     "VMMCostLedger",
     "VMMDevice",
     "num_chunks",
@@ -72,11 +88,15 @@ __all__ = [
     "pack_extents",
     "round_up",
     "unpack_extents",
+    "AllocatorEventLog",
     "AllocatorStats",
     "ReplayResult",
     "mem_reduction_ratio",
     "AllocatorCapabilities",
     "AllocatorProtocol",
+    "RecoveryConfig",
+    "recovery_enabled",
+    "run_ladder",
     "Allocation",
     "AllocatorOOM",
     "CachingAllocator",

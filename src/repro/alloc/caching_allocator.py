@@ -21,8 +21,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .chunks import MB, DeviceOOM, VMMDevice, round_up
-from .metrics import AllocatorStats
+from .metrics import AllocatorEventLog, AllocatorStats
 from .protocol import AllocatorCapabilities
+from .recovery import RecoveryConfig, recovery_enabled, run_ladder
 from .registry import register
 
 # PyTorch CUDACachingAllocator constants
@@ -88,7 +89,7 @@ class Allocation:
 
 @register(
     "caching",
-    AllocatorCapabilities(caching=True, releases_cached=True),
+    AllocatorCapabilities(caching=True, releases_cached=True, recovery=True),
 )
 class CachingAllocator:
     """BFC allocator over a ``VMMDevice`` (the paper's baseline, §2.2).
@@ -106,9 +107,21 @@ class CachingAllocator:
 
     name = "caching"
 
-    def __init__(self, device: VMMDevice, record_timeline: bool = False):
+    def __init__(
+        self,
+        device: VMMDevice,
+        record_timeline: bool = False,
+        recovery: Optional[bool] = None,
+        event_log: Optional[AllocatorEventLog] = None,
+    ):
         self.device = device
         self.stats = AllocatorStats(record_timeline=record_timeline)
+        # staged OOM recovery: auto-on under a fault-injecting device, else
+        # opt-in; the composite parents (gmlake, stalloc) pass their own
+        # event_log so one replay yields one coherent event stream
+        self._recovery_on = recovery_enabled(device, recovery)
+        self._recovery_cfg = RecoveryConfig()
+        self.event_log = AllocatorEventLog() if event_log is None else event_log
         # free lists: pool -> sorted [(size, block_id, block)]
         self._free: Dict[str, List[tuple]] = {"small": [], "large": []}
         self._segments: Dict[int, Segment] = {}
@@ -215,17 +228,20 @@ class CachingAllocator:
         block = self._find_best_fit(pool, rsize)
         if block is None:
             seg_size = self._segment_size(rsize)
-            try:
-                block = self._new_segment(seg_size, pool)
-            except DeviceOOM:
-                self.release_cached()
+            if self._recovery_on:
+                block = self._recover_segment(seg_size, pool, size)
+            else:
                 try:
                     block = self._new_segment(seg_size, pool)
-                except DeviceOOM as e:
-                    raise AllocatorOOM(
-                        f"caching allocator OOM for {size} bytes "
-                        f"(reserved={self._reserved}, device_free={self.device.free_bytes})"
-                    ) from e
+                except DeviceOOM:
+                    self.release_cached()
+                    try:
+                        block = self._new_segment(seg_size, pool)
+                    except DeviceOOM as e:
+                        raise AllocatorOOM(
+                            f"caching allocator OOM for {size} bytes "
+                            f"(reserved={self._reserved}, device_free={self.device.free_bytes})"
+                        ) from e
         else:
             self._free_remove(block)
 
@@ -243,6 +259,24 @@ class CachingAllocator:
         block.allocated = True
         self.stats.on_alloc(block.size, self._reserved)
         return Allocation(req_size=size, block_size=block.size, block=block, owner=self)
+
+    def _recover_segment(self, seg_size: int, pool: str, req_size: int) -> BFCBlock:
+        """Recovery-mode segment reservation: release cached segments, then
+        bounded backoff retries (clears transient fault bursts)."""
+        try:
+            return run_ladder(
+                lambda: self._new_segment(seg_size, pool),
+                [("release_cached", self.release_cached)],
+                device=self.device,
+                log=self.event_log,
+                config=self._recovery_cfg,
+                what=f"segment:{seg_size}",
+            )
+        except DeviceOOM as e:
+            raise AllocatorOOM(
+                f"caching allocator OOM for {req_size} bytes "
+                f"(reserved={self._reserved}, device_free={self.device.free_bytes})"
+            ) from e
 
     def free(self, alloc: Allocation) -> None:
         """Flip the block free and coalesce with free neighbours.

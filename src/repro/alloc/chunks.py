@@ -19,9 +19,10 @@ from __future__ import annotations
 
 import itertools
 import math
+import random
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional
 
 MB = 1024 * 1024
 GB = 1024 * MB
@@ -230,6 +231,16 @@ class DeviceOOM(MemoryError):
     """Raised by the device model when physical capacity is exhausted."""
 
 
+class TransientDeviceError(DeviceOOM):
+    """An injected *transient* VMM API failure (see ``FaultInjector``).
+
+    Subclasses ``DeviceOOM`` so every existing ``except DeviceOOM`` site
+    still contains it — a fault can never escape a backend as a raw device
+    error — while recovery-aware backends can distinguish a retryable
+    driver hiccup from genuine capacity exhaustion.
+    """
+
+
 class VMMDevice:
     """Physical-memory inventory + API cost model.
 
@@ -249,6 +260,9 @@ class VMMDevice:
         self._segment_bytes = 0  # bytes held by cu_malloc segments
         self.ledger = VMMCostLedger()
         self._next_va = 0
+        # capacity-shrink accounting (simulated device loss, see shrink())
+        self._pending_shrink_chunks = 0
+        self.shrunk_bytes = 0
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -259,6 +273,29 @@ class VMMDevice:
     @property
     def free_bytes(self) -> int:
         return self.capacity_bytes - self.used_bytes
+
+    def shrink(self, nbytes: int) -> int:
+        """Permanently lose ``nbytes`` of capacity (device loss / neighbor-
+        tenant pressure).
+
+        Free chunks are confiscated immediately; when the free inventory
+        cannot cover the loss, the remainder becomes a *pending* debt that
+        is retired by future ``cu_mem_release`` calls — the tenant reclaims
+        physical pages as the allocator hands them back. While the debt is
+        outstanding ``free_bytes`` may go negative and every alloc-side API
+        fails, which is exactly the pressure a recovery ladder must relieve
+        by releasing memory. Returns the pending (not yet retired) bytes.
+        """
+        n = round_up(nbytes, self.chunk_size) // self.chunk_size
+        take = min(n, len(self._free_chunks))
+        # confiscate from the bottom of the LIFO stack so the recycling
+        # order of the surviving free chunks is undisturbed
+        del self._free_chunks[:take]
+        self.total_chunks -= take
+        self.capacity_bytes -= n * self.chunk_size
+        self._pending_shrink_chunks += n - take
+        self.shrunk_bytes += n * self.chunk_size
+        return self._pending_shrink_chunks * self.chunk_size
 
     # -- native allocator path ---------------------------------------------
     def cu_malloc(self, size: int) -> int:
@@ -309,8 +346,16 @@ class VMMDevice:
 
     def cu_mem_release(self, chunks: Iterable[int]) -> None:
         chunks = list(chunks)
+        ncalls = len(chunks)
+        if self._pending_shrink_chunks:
+            # retire outstanding shrink debt before refilling the free list:
+            # the confiscating tenant takes pages the moment they come back
+            retired = min(self._pending_shrink_chunks, ncalls)
+            self._pending_shrink_chunks -= retired
+            self.total_chunks -= retired
+            chunks = chunks[retired:]
         self._free_chunks.extend(chunks)
-        self.ledger.charge("cuMemRelease", len(chunks) * 0.01, len(chunks))
+        self.ledger.charge("cuMemRelease", ncalls * 0.01, ncalls)
 
     def cu_mem_address_free(self) -> None:
         self.ledger.charge("cuMemAddressFree", 0.003)
@@ -340,5 +385,196 @@ class VMMDevice:
         break the bit-identity of ``model_cost`` across rounds — the
         load-independent signal the replay regression gate keys on.
         """
+        self.vmm_map_existing(na)
+        self.vmm_map_existing(nb)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Deterministic fault plan for a :class:`FaultInjector`.
+
+    All randomness comes from ``random.Random(seed)`` drawn in device-API
+    call order, so the same allocator run over the same schedule observes
+    the same faults — replays, tests and benchmarks are reproducible.
+    """
+
+    seed: int = 0
+    #: per-call probability that an alloc-side API (``cuMalloc`` /
+    #: ``cuMemCreate``) fails transiently
+    create_fail_prob: float = 0.0
+    #: per-call probability that ``cuMemMap`` fails transiently
+    map_fail_prob: float = 0.0
+    #: consecutive failures per triggered fault (a flaky driver rarely
+    #: fails exactly once)
+    burst: int = 1
+    #: driver-level retries absorbed per cuMemMap fault before the error
+    #: propagates; keep >= ``burst`` or a mid-stitch map can fail
+    #: non-transactionally (see FaultInjector docstring)
+    map_retry_limit: int = 8
+    #: per-call probability of a slow device call; the stall is charged to
+    #: the ledger under ``faultStall``
+    slow_prob: float = 0.0
+    slow_cost: float = DEVICE_SYNC_COST
+    #: one-shot capacity loss fired entering the Nth alloc-side call
+    #: (1-based; None = never) — simulated device loss / tenant pressure
+    shrink_at_call: Optional[int] = None
+    shrink_bytes: int = 0
+    #: one-shot deterministic failure burst armed entering the Nth
+    #: alloc-side call (1-based; None = never): the next ``fail_burst``
+    #: alloc-side calls raise ``TransientDeviceError`` regardless of the
+    #: probability schedule. Sized past a backend's recovery-ladder
+    #: attempt budget this reproducibly forces the AllocatorOOM ->
+    #: supervisor-restore path (the kill/recover scenario)
+    fail_at_call: Optional[int] = None
+    fail_burst: int = 0
+
+
+class FaultInjector:
+    """Seed-scheduled fault-injecting wrapper around a :class:`VMMDevice`.
+
+    A drop-in ``device`` for every backend: anything not overridden
+    delegates to the wrapped device (``__getattr__``), so ledgers, capacity
+    accounting and the native path behave identically. What it injects:
+
+      * alloc-side APIs (``cu_malloc``, ``cu_mem_create``) raise
+        :class:`TransientDeviceError` per the probability/burst schedule,
+        and fire the scheduled capacity shrink;
+      * ``cu_mem_map`` faults are absorbed by a bounded driver-level retry
+        loop, each absorbed fault charged to the ledger as ``faultStall``.
+        Retrying at the injector (not the backend) keeps mid-stitch /
+        mid-split map failures crash-consistent: GMLake mutates its
+        registries before remapping, so a map error escaping there would
+        corrupt allocator state rather than exercise recovery;
+      * ``vmm_alloc`` is transactional: if mapping fails past the retry
+        limit after chunks were created, the chunks are released before the
+        error propagates — the backend sees the fault at a safe point and
+        its recovery ladder takes over;
+      * slow-call injection charges ``faultStall`` without failing.
+
+    Backends auto-detect the wrapper via ``supports_fault_injection`` and
+    enable their recovery ladder, keeping the fault-free default path
+    bit-identical to the legacy one.
+    """
+
+    supports_fault_injection = True
+
+    def __init__(self, device: VMMDevice, schedule: FaultSchedule = FaultSchedule()):
+        self.inner = device
+        self.schedule = schedule
+        self._rng = random.Random(schedule.seed)
+        self._alloc_calls = 0
+        self._burst_left = 0  # alloc-side burst in progress
+        self._map_burst_left = 0
+        self.fault_counts: Dict[str, int] = {}
+        self.fault_events: List[dict] = []
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def __repr__(self) -> str:
+        return f"FaultInjector({self.inner!r}, {self.schedule!r})"
+
+    # -- bookkeeping ----------------------------------------------------------
+    def _note(self, kind: str, **detail) -> None:
+        self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+        ev = {"kind": kind, "call": self._alloc_calls}
+        ev.update(detail)
+        self.fault_events.append(ev)
+
+    def _maybe_slow(self) -> None:
+        s = self.schedule
+        if s.slow_prob and self._rng.random() < s.slow_prob:
+            self.inner.ledger.charge("faultStall", s.slow_cost)
+            self._note("slow")
+
+    def _alloc_side(self, api: str) -> None:
+        s = self.schedule
+        self._alloc_calls += 1
+        if (
+            s.shrink_at_call is not None
+            and self._alloc_calls == s.shrink_at_call
+            and s.shrink_bytes
+        ):
+            pending = self.inner.shrink(s.shrink_bytes)
+            self._note("shrink", bytes=s.shrink_bytes, pending=pending)
+        if (
+            s.fail_at_call is not None
+            and self._alloc_calls == s.fail_at_call
+            and s.fail_burst
+        ):
+            self._burst_left = s.fail_burst
+            self._note("burst_armed", n=s.fail_burst)
+        self._maybe_slow()
+        if self._burst_left:
+            self._burst_left -= 1
+            self._note("create_fault", api=api, burst=True)
+            raise TransientDeviceError(f"injected transient {api} failure (burst)")
+        if s.create_fail_prob and self._rng.random() < s.create_fail_prob:
+            self._burst_left = s.burst - 1
+            self._note("create_fault", api=api, burst=False)
+            raise TransientDeviceError(f"injected transient {api} failure")
+
+    # -- injected primitives --------------------------------------------------
+    def cu_malloc(self, size: int) -> int:
+        self._alloc_side("cuMalloc")
+        return self.inner.cu_malloc(size)
+
+    def cu_mem_create(self, n: int) -> List[int]:
+        self._alloc_side("cuMemCreate")
+        return self.inner.cu_mem_create(n)
+
+    def _map_fault(self) -> bool:
+        """One cuMemMap draw; True = this call faults."""
+        s = self.schedule
+        self._maybe_slow()
+        if self._map_burst_left:
+            self._map_burst_left -= 1
+            return True
+        if s.map_fail_prob and self._rng.random() < s.map_fail_prob:
+            self._map_burst_left = s.burst - 1
+            return True
+        return False
+
+    def cu_mem_map(self, n: int) -> None:
+        s = self.schedule
+        for attempt in range(s.map_retry_limit + 1):
+            if not self._map_fault():
+                if attempt:
+                    self._note("map_retries_absorbed", retries=attempt)
+                return self.inner.cu_mem_map(n)
+            self._note("map_fault")
+            self.inner.ledger.charge("faultStall", s.slow_cost)
+        raise TransientDeviceError(
+            f"injected cuMemMap failure persisted past {s.map_retry_limit} retries"
+        )
+
+    # -- composite helpers ----------------------------------------------------
+    # Re-declared so they route through the injector's primitives; the base
+    # class's composites would call the wrapped device's own cu_* methods
+    # and bypass injection entirely.
+    def vmm_alloc(self, size: int) -> List[int]:
+        n = num_chunks(size)
+        self.cu_mem_address_reserve(size)
+        chunks = self.cu_mem_create(n)
+        try:
+            self.cu_mem_map(n)
+            self.cu_mem_set_access(n)
+        except TransientDeviceError:
+            # transactional: never leak created chunks on a map failure
+            self.inner.cu_mem_release(chunks)
+            raise
+        return chunks
+
+    def vmm_map_existing(self, n: int) -> None:
+        self.cu_mem_address_reserve(n * self.chunk_size)
+        self.cu_mem_map(n)
+        self.cu_mem_set_access(n)
+
+    def vmm_split_remap(self, na: int, nb: int) -> None:
         self.vmm_map_existing(na)
         self.vmm_map_existing(nb)

@@ -124,8 +124,9 @@ from .chunks import (
     pack_extents,
     round_up,
 )
-from .metrics import AllocatorStats
+from .metrics import AllocatorEventLog, AllocatorStats
 from .protocol import AllocatorCapabilities
+from .recovery import RecoveryConfig, recovery_enabled, run_ladder
 from .registry import register
 
 _ids = itertools.count()
@@ -654,7 +655,11 @@ class _PartitionedPool:
 @register(
     "gmlake",
     AllocatorCapabilities(
-        caching=True, stitching=True, state_counts=True, releases_cached=True
+        caching=True,
+        stitching=True,
+        state_counts=True,
+        releases_cached=True,
+        recovery=True,
     ),
 )
 class GMLakeAllocator:
@@ -701,6 +706,8 @@ class GMLakeAllocator:
         sblock_va_budget: Optional[int] = None,
         record_timeline: bool = False,
         plan_identity: bool = True,
+        recovery: Optional[bool] = None,
+        deferred_unmap: Optional[bool] = None,
     ):
         self.device = device
         self.frag_limit = frag_limit
@@ -741,8 +748,23 @@ class GMLakeAllocator:
         self._chunk_bytes = 0  # physical chunks created (reserved by VMS pool)
         self._tick = 0
 
-        # requests < 2 MB use the classic splitting pool (paper §3.1)
-        self._small = CachingAllocator(device)
+        # staged OOM recovery (auto-on under a fault-injecting device) and
+        # deferred (stream-ordered) physical unmap, which follows recovery
+        # unless set explicitly; the unmap queue holds member counts of
+        # destroyed sBlocks whose physical unmap is pending a safe point
+        self._recovery_on = recovery_enabled(device, recovery)
+        self._recovery_cfg = RecoveryConfig()
+        self.event_log = AllocatorEventLog()
+        self._deferred_unmap = (
+            self._recovery_on if deferred_unmap is None else bool(deferred_unmap)
+        )
+        self._unmap_queue: List[int] = []
+
+        # requests < 2 MB use the classic splitting pool (paper §3.1); it
+        # shares this allocator's event log so one replay yields one stream
+        self._small = CachingAllocator(
+            device, recovery=self._recovery_on, event_log=self.event_log
+        )
 
     # ------------------------------------------------------------------
     # accounting
@@ -1143,8 +1165,13 @@ class GMLakeAllocator:
         self._dead_refs.append(s)
         if len(self._dead_refs) > self.DEAD_LOG_LIMIT:
             self._compact_dead_log()
-        self.device.cu_mem_unmap(s.n_members)
-        self.device.cu_mem_address_free()
+        if self._deferred_unmap:
+            # stream-ordered reclamation: the physical unmap leaves the
+            # allocation path and waits on the drain queue for a safe point
+            self._unmap_queue.append(s.n_members)
+        else:
+            self.device.cu_mem_unmap(s.n_members)
+            self.device.cu_mem_address_free()
         shells = self._shells
         if len(shells) < self.MAX_SHELLS:
             s._members = None
@@ -1420,11 +1447,15 @@ class GMLakeAllocator:
         try:
             block = self._malloc_vms(bsize)
         except DeviceOOM as e:
-            self.state_counts["S5"] += 1
-            raise AllocatorOOM(
-                f"GMLake OOM for {size} bytes (reserved={self.reserved_bytes}, "
-                f"active={self.stats.active_bytes}, device_free={self.device.free_bytes})"
-            ) from e
+            if self._recovery_on:
+                block = self._recover_vms(bsize, size)  # raises AllocatorOOM
+            else:
+                self.state_counts["S5"] += 1
+                raise AllocatorOOM(
+                    f"GMLake OOM for {size} bytes (reserved={self.reserved_bytes}, "
+                    f"active={self.stats.active_bytes}, "
+                    f"device_free={self.device.free_bytes})"
+                ) from e
         if isinstance(block, SBlock):
             block.last_use = self._tick
         self.stats.on_alloc(block.size, self.reserved_bytes)
@@ -1535,9 +1566,117 @@ class GMLakeAllocator:
         GMLake's chunks are deliberately never returned mid-run (paper:
         Update keeps physical memory; stitching re-purposes it), so the
         only releasable cache is the embedded small pool's fully-free
-        segments. Returns bytes released.
+        segments. Also a safe point for the deferred-unmap drain (a no-op
+        unless stream-ordered reclamation queued work). Returns bytes
+        released.
         """
+        self.drain_deferred_unmaps()
         return self._small.release_cached()
+
+    # ------------------------------------------------------------------
+    # staged OOM recovery + deferred (stream-ordered) reclamation
+    # ------------------------------------------------------------------
+    @property
+    def pending_unmaps(self) -> int:
+        """Queued physical unmaps awaiting a drain safe point."""
+        return len(self._unmap_queue)
+
+    def drain_deferred_unmaps(self) -> int:
+        """Apply every queued physical unmap. Returns entries drained.
+
+        Safe points: ``release_cached``, the recovery ladder's drain rung,
+        or an explicit call between serving steps. Crash-consistent by
+        construction: an entry is popped and charged atomically with
+        respect to injected faults (``cu_mem_unmap``/``cu_mem_address_free``
+        never fail in the device model — real streams retire unmaps
+        asynchronously too), so every destroy is charged exactly once no
+        matter when faults strike the allocation path.
+        """
+        q = self._unmap_queue
+        if not q:
+            return 0
+        self._unmap_queue = []
+        for n in q:
+            self.device.cu_mem_unmap(n)
+            self.device.cu_mem_address_free()
+        return len(q)
+
+    def _evict_stitchfree(self) -> int:
+        """Recovery rung: StitchFree *every* inactive sBlock, budget or not.
+
+        Frees stitched VA so its member pBlocks become plain pooled blocks
+        that later rungs may physically reclaim. With deferred unmap on,
+        the physical work queues for the next drain rung. Returns VA bytes
+        evicted.
+        """
+        self._reconcile()
+        self._inactive_s.sweep()
+        freed = 0
+        for s in list(self._inactive_s):
+            freed += s.size
+            self._destroy_sblock(s)
+        return freed
+
+    def _reclaim_physical(self) -> int:
+        """Final reclamation rung: give pooled physical chunks back.
+
+        Update semantics deliberately never release chunks mid-run, which
+        is the right call under steady capacity — and exactly wrong after
+        a capacity shrink (device loss / tenant pressure), when the device
+        needs real pages back. After StitchFree eviction and a drain, every
+        pooled inactive pBlock is referenced by no live sBlock (members of
+        held blocks are active; pending frees were reconciled), so it can
+        be unmapped, VA-freed and released. Returns bytes released.
+        """
+        self._evict_stitchfree()
+        self.drain_deferred_unmaps()
+        plan, total, refs, members = self._take_all(True)
+        del plan, total, refs  # handout bookkeeping; the blocks are doomed
+        freed = 0
+        for p in members:
+            if p.sb_refs:
+                # defensive: a still-referenced block goes back to the pool
+                self._inactive_p.add(p)
+                continue
+            del self._pblocks[p.pid]
+            n = len(p.chunks)
+            self.device.cu_mem_unmap(n)
+            self.device.cu_mem_address_free()
+            self.device.cu_mem_release(list(p.chunks))
+            self._chunk_bytes -= p.size
+            freed += p.size
+        return freed
+
+    def _recover_vms(self, bsize: int, req_size: int):
+        """Walk the reclamation ladder for a failed VMS allocation.
+
+        Rungs, cheapest first: drop small-pool cache, StitchFree-evict all
+        inactive VA, drain deferred unmaps, return pooled physical chunks;
+        then bounded backoff retries clear transient fault bursts. Raises
+        ``AllocatorOOM`` (S5) when the ladder is exhausted.
+        """
+        stages = [
+            ("release_small_cache", self._small.release_cached),
+            ("evict_stitchfree", self._evict_stitchfree),
+            ("drain_deferred_unmaps", self.drain_deferred_unmaps),
+            ("reclaim_physical", self._reclaim_physical),
+        ]
+        try:
+            return run_ladder(
+                lambda: self._malloc_vms(bsize),
+                stages,
+                device=self.device,
+                log=self.event_log,
+                config=self._recovery_cfg,
+                what=f"vms:{bsize}",
+            )
+        except DeviceOOM as e:
+            self.state_counts["S5"] += 1
+            raise AllocatorOOM(
+                f"GMLake OOM for {req_size} bytes (reserved={self.reserved_bytes}, "
+                f"active={self.stats.active_bytes}, "
+                f"device_free={self.device.free_bytes})"
+            ) from e
 
     # ------------------------------------------------------------------
     # debug / test support
@@ -1629,6 +1768,8 @@ class GMLakeAllocator:
                 assert p.pid in self._pblocks
         assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
         assert self._sblock_va_bytes == sum(s.size for s in self._sblocks.values())
+        # the drain queue only ever fills under stream-ordered reclamation
+        assert self._deferred_unmap or not self._unmap_queue
         # partition routing + running byte counters
         for pool, below in ((self._inactive_p.sub, True), (self._inactive_p.main, False)):
             assert pool.bytes == sum(p.size for p in pool)

@@ -12,7 +12,7 @@ Metric definitions follow the paper §5.1:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -81,6 +81,34 @@ class AllocatorStats:
         return 1.0 - self.utilization
 
 
+@dataclass
+class AllocatorEventLog:
+    """Structured allocator event stream (recovery attempts, reclamation
+    rungs, spills, injected-fault observations).
+
+    Append-only observability: never part of the golden digests. Composite
+    backends (GMLake's small pool, STAlloc's fallback) share the parent's
+    log so one replay yields one coherent event stream, surfaced through
+    ``ServeEngine.memory_report()`` / ``ReplayResult.recovery`` / the
+    fault bench.
+    """
+
+    events: List[dict] = field(default_factory=list)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    def append(self, kind: str, **detail) -> None:
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        ev = {"kind": kind}
+        ev.update(detail)
+        self.events.append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def summary(self) -> dict:
+        return {"n_events": len(self.events), "counts": dict(self.counts)}
+
+
 def mem_reduction_ratio(reserved: List[int], gmlake_reserved: List[int]) -> float:
     """Arithmetic-average memory reduction across workloads (paper §5.1)."""
     tot = sum(reserved)
@@ -100,6 +128,9 @@ class ReplayResult:
     oom: bool = False
     oom_at_event: Optional[int] = None
     state_counts: Optional[dict] = None  # GMLake S1..S5 hit counts
+    #: ``AllocatorEventLog.summary()`` when the backend logged recovery /
+    #: reclamation events during the replay; None on a quiet run
+    recovery: Optional[dict] = None
 
     @property
     def utilization(self) -> float:

@@ -60,6 +60,11 @@ class AllocatorCapabilities:
     state_counts: bool = False
     #: ``release_cached()`` can actually return memory to the device
     releases_cached: bool = False
+    #: walks the staged OOM-recovery ladder (release cached -> evict
+    #: StitchFree VA -> drain deferred unmaps -> bounded retry) instead of
+    #: surfacing the first ``DeviceOOM``; auto-enabled under a
+    #: fault-injecting device, opt-in (``recovery=True``) otherwise
+    recovery: bool = False
 
 
 @runtime_checkable

@@ -71,6 +71,15 @@ def capabilities(backend: Union[str, AllocatorProtocol, type]) -> AllocatorCapab
     return backend.capabilities
 
 
+def with_capability(flag: str) -> List[str]:
+    """Backend names whose declared capabilities set ``flag`` truthy.
+
+    The generic way for consumers (fault benches, conformance tests) to
+    select e.g. every ``recovery`` backend without hardcoding names.
+    """
+    return [n for n, cls in _BACKENDS.items() if getattr(cls.capabilities, flag, False)]
+
+
 def create(name: str, device, record_timeline: bool = False, **kwargs):
     """Instantiate backend ``name`` over ``device``."""
     return get(name)(device, record_timeline=record_timeline, **kwargs)
@@ -108,6 +117,7 @@ __all__ = [
     "names",
     "get",
     "capabilities",
+    "with_capability",
     "create",
     "resolve",
 ]

@@ -48,8 +48,9 @@ from .caching_allocator import (
     CachingAllocator,
 )
 from .chunks import DeviceOOM, VMMDevice, round_up
-from .metrics import AllocatorStats
+from .metrics import AllocatorEventLog, AllocatorStats
 from .protocol import AllocatorCapabilities
+from .recovery import RecoveryConfig, recovery_enabled, run_ladder
 from .registry import register
 
 
@@ -311,7 +312,9 @@ def build_plan(trace, granularity: int = MIN_BLOCK_SIZE) -> PlacementPlan:
 
 @register(
     "stalloc",
-    AllocatorCapabilities(caching=True, planning=True, releases_cached=True),
+    AllocatorCapabilities(
+        caching=True, planning=True, releases_cached=True, recovery=True
+    ),
 )
 class STAllocAllocator:
     """Runtime half of the planner: planned placements + BFC fallback.
@@ -331,6 +334,7 @@ class STAllocAllocator:
         plan: Optional[PlacementPlan] = None,
         record_timeline: bool = False,
         granularity: int = MIN_BLOCK_SIZE,
+        recovery: Optional[bool] = None,
     ):
         self.device = device
         self.stats = AllocatorStats(record_timeline=record_timeline)
@@ -338,7 +342,14 @@ class STAllocAllocator:
         self.granularity = granularity
         self._cursor = 0  # arrival index of the next planned request
         self._plan_reserved = 0  # plan.capacity once the arena is reserved
-        self._fallback = CachingAllocator(device)
+        # staged OOM recovery (auto-on under a fault-injecting device); the
+        # fallback pool shares this allocator's event log and ladder setting
+        self._recovery_on = recovery_enabled(device, recovery)
+        self._recovery_cfg = RecoveryConfig()
+        self.event_log = AllocatorEventLog()
+        self._fallback = CachingAllocator(
+            device, recovery=self._recovery_on, event_log=self.event_log
+        )
         self.planned_allocs = 0
         self.fallback_allocs = 0
 
@@ -376,7 +387,24 @@ class STAllocAllocator:
     # -- allocation -----------------------------------------------------------
     def _reserve_arena(self) -> None:
         cap = self.plan.capacity
-        if cap:
+        if not cap:
+            return
+        if self._recovery_on:
+            try:
+                run_ladder(
+                    lambda: self.device.cu_malloc(cap),
+                    [("release_fallback_cache", self._fallback.release_cached)],
+                    device=self.device,
+                    log=self.event_log,
+                    config=self._recovery_cfg,
+                    what=f"arena:{cap}",
+                )
+            except DeviceOOM as e:
+                raise AllocatorOOM(
+                    f"stalloc plan needs {cap} bytes upfront "
+                    f"(device_free={self.device.free_bytes})"
+                ) from e
+        else:
             try:
                 self.device.cu_malloc(cap)
             except DeviceOOM as e:
@@ -384,7 +412,7 @@ class STAllocAllocator:
                     f"stalloc plan needs {cap} bytes upfront "
                     f"(device_free={self.device.free_bytes})"
                 ) from e
-            self._plan_reserved = cap
+        self._plan_reserved = cap
 
     def malloc(self, size: int) -> Allocation:
         plan = self.plan
@@ -392,7 +420,20 @@ class STAllocAllocator:
         rsize = round_up(size, self.granularity)
         if plan is not None and j < len(plan.sizes) and plan.sizes[j] == rsize:
             if not self._plan_reserved:
-                self._reserve_arena()
+                if self._recovery_on:
+                    try:
+                        self._reserve_arena()
+                    except AllocatorOOM:
+                        # fallback-region spill: the plan's upfront arena
+                        # cannot be reserved on a shrunken/faulty device
+                        # even after the ladder. Serve this request from
+                        # the BFC pool instead of failing the replay; the
+                        # cursor stays put, so the next planned request
+                        # retries the reservation.
+                        self.event_log.append("spill_to_fallback", size=rsize)
+                        return self._fallback_malloc(size)
+                else:
+                    self._reserve_arena()
             self._cursor = j + 1
             self.planned_allocs += 1
             block = PlannedBlock(plan.offsets[j], rsize)
@@ -403,6 +444,9 @@ class STAllocAllocator:
         # divergence from the profile: serve from the BFC pool instead. The
         # cursor does not advance, so one unexpected request cannot shift
         # every subsequent planned placement out of alignment.
+        return self._fallback_malloc(size)
+
+    def _fallback_malloc(self, size: int) -> Allocation:
         alloc = self._fallback.malloc(size)
         alloc.owner = self
         self.fallback_allocs += 1

@@ -36,7 +36,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from ..alloc import registry as _registry
 from ..alloc.caching_allocator import AllocatorOOM
-from ..alloc.chunks import GB, MB, VMMDevice
+from ..alloc.chunks import GB, MB, FaultInjector, FaultSchedule, VMMDevice
 from ..alloc.metrics import ReplayResult
 
 BF16 = 2
@@ -489,6 +489,7 @@ def _resolve_allocator(
     trace=None,
     capacity_bytes: int = 80 * GB,
     record_timeline: bool = False,
+    fault_schedule: Optional[FaultSchedule] = None,
     **alloc_kwargs,
 ):
     """Backend instance from a registry key or a protocol instance.
@@ -498,16 +499,30 @@ def _resolve_allocator(
     Backends that plan from a profiled trace (``capabilities.planning`` /
     ``needs_prepare``) get their ``prepare(trace)`` pass here — outside
     the timed replay loop, matching their offline-profiling deployment.
+
+    ``fault_schedule`` wraps the fresh device in a seed-scheduled
+    ``FaultInjector`` (registry keys only — an instance already bound its
+    device; wrap it yourself before constructing); backends auto-detect
+    the injector and enable their recovery ladder.
     """
-    allocator = _registry.resolve(
-        allocator, lambda: VMMDevice(capacity_bytes), record_timeline, **alloc_kwargs
-    )
+    if fault_schedule is not None:
+        if not isinstance(allocator, str):
+            raise ValueError(
+                "fault_schedule requires a registry key (the injector wraps "
+                "a fresh device); for an instance, construct it over "
+                "FaultInjector(VMMDevice(...), schedule) yourself"
+            )
+        factory = lambda: FaultInjector(VMMDevice(capacity_bytes), fault_schedule)
+    else:
+        factory = lambda: VMMDevice(capacity_bytes)
+    allocator = _registry.resolve(allocator, factory, record_timeline, **alloc_kwargs)
     if trace is not None and getattr(allocator, "needs_prepare", False):
         allocator.prepare(trace)
     return allocator
 
 
 def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
+    event_log = getattr(allocator, "event_log", None)
     return ReplayResult(
         name=allocator.name,
         stats=allocator.stats,
@@ -516,6 +531,7 @@ def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
         oom=oom,
         oom_at_event=oom_at,
         state_counts=dict(getattr(allocator, "state_counts", {})) or None,
+        recovery=event_log.summary() if event_log is not None and len(event_log) else None,
     )
 
 
@@ -525,6 +541,7 @@ def replay(
     stop_on_oom: bool = True,
     check_invariants_every: int = 0,
     capacity_bytes: int = 80 * GB,
+    fault_schedule: Optional[FaultSchedule] = None,
 ) -> ReplayResult:
     """Feed a trace through an allocator; returns metrics + cost + wall time.
 
@@ -545,8 +562,14 @@ def replay(
     frees — which is timing-transparent by design, a property the golden
     tests pin by replaying at several cadences (see
     ``tests/test_golden_equivalence.py::test_reconcile_timing_is_unobservable``).
+
+    ``fault_schedule`` replays under injected VMM faults (see
+    ``FaultInjector``): transient failures and capacity shrinks surface as
+    ``AllocatorOOM`` only when a backend's recovery ladder is exhausted.
     """
-    allocator = _resolve_allocator(allocator, trace, capacity_bytes)
+    allocator = _resolve_allocator(
+        allocator, trace, capacity_bytes, fault_schedule=fault_schedule
+    )
     live: Dict[int, object] = {}
     oom = False
     oom_at = None
@@ -614,6 +637,7 @@ def replay_batched(
     stop_on_oom: bool = True,
     batch_size: int = 8192,
     capacity_bytes: int = 80 * GB,
+    fault_schedule: Optional[FaultSchedule] = None,
 ) -> ReplayResult:
     """Replay over the pre-compiled event arrays in fixed-size batches.
 
@@ -625,7 +649,9 @@ def replay_batched(
     no-timeline fast path at construction when ``record_timeline`` is off,
     which is what makes the per-event accounting cheap enough here.
     """
-    allocator = _resolve_allocator(allocator, trace, capacity_bytes)
+    allocator = _resolve_allocator(
+        allocator, trace, capacity_bytes, fault_schedule=fault_schedule
+    )
     ops, tids, sizes, labels = trace.compiled()
     live: Dict[int, object] = {}
     oom = False
@@ -673,6 +699,7 @@ def run_workload(
     allocator,
     capacity_bytes: int = 80 * GB,
     record_timeline: bool = False,
+    fault_schedule: Optional[FaultSchedule] = None,
     **alloc_kwargs,
 ) -> ReplayResult:
     """Convenience: fresh device + backend, replay, return result.
@@ -681,7 +708,12 @@ def run_workload(
     or an already-constructed protocol instance.
     """
     allocator = _resolve_allocator(
-        allocator, trace, capacity_bytes, record_timeline, **alloc_kwargs
+        allocator,
+        trace,
+        capacity_bytes,
+        record_timeline,
+        fault_schedule=fault_schedule,
+        **alloc_kwargs,
     )
     result, _ = replay(trace, allocator)
     return result

@@ -73,6 +73,18 @@ class SupervisorConfig:
     straggler_factor: float = 3.0
     #: "log" (record + continue) | "raise" (escalate to restart logic)
     straggler_policy: str = "log"
+    #: rolling window / warmup steps for the straggler median (plumbed
+    #: into ``StragglerDetector``)
+    straggler_window: int = 32
+    straggler_warmup: int = 4
+    #: after this many consecutive successful steps the restart budget
+    #: resets, so one flaky step early in a long run doesn't consume the
+    #: budget forever (None = never reset, the legacy behaviour)
+    restart_reset_after: Optional[int] = None
+    #: exception types that trigger restore-and-retry. ``MemoryError``
+    #: covers ``AllocatorOOM``: under capacity loss the right move is to
+    #: restore and rebuild tight on the shrunken device, not crash.
+    recoverable: tuple = (RuntimeError, OSError, MemoryError)
 
 
 class Supervisor:
@@ -88,15 +100,25 @@ class Supervisor:
         step_fn: Callable,
         batch_iter: Callable[[int], Any],
         ckpt: CheckpointManager,
-        config: SupervisorConfig = SupervisorConfig(),
+        config: Optional[SupervisorConfig] = None,
         clock: Callable[[], float] = time.monotonic,
         state_shardings: Any = None,
     ):
         self.step_fn = step_fn
         self.batch_iter = batch_iter
         self.ckpt = ckpt
-        self.config = config
-        self.detector = StragglerDetector(factor=config.straggler_factor, clock=clock)
+        # default built per instance: a shared default SupervisorConfig()
+        # instance would leak mutations across every Supervisor
+        self.config = SupervisorConfig() if config is None else config
+        self.detector = StragglerDetector(
+            factor=self.config.straggler_factor,
+            window=self.config.straggler_window,
+            warmup=self.config.straggler_warmup,
+            clock=clock,
+        )
+        # StragglerEvent must stay catchable even if a custom recoverable
+        # tuple drops RuntimeError — the "raise" policy routes through here
+        self._recoverable = (StragglerEvent,) + tuple(self.config.recoverable)
         self.state_shardings = state_shardings
         self.events: List[Dict] = []  # audit log: restarts, stragglers
 
@@ -104,8 +126,10 @@ class Supervisor:
             fail_injector: Optional[Callable[[int], None]] = None):
         """Returns (final_state, history). Restores + retries on failure."""
         restarts = 0
+        ok_streak = 0  # successful steps since the last restart
         step = start_step
         history: List[Dict] = []
+        reset_after = self.config.restart_reset_after
         while step < start_step + n_steps:
             try:
                 batch = self.batch_iter(step)
@@ -121,10 +145,16 @@ class Supervisor:
                         raise ev
                 history.append({"step": step, **jax_to_float(metrics)})
                 step += 1
+                ok_streak += 1
+                if reset_after is not None and restarts and ok_streak >= reset_after:
+                    self.events.append({"kind": "budget_reset", "step": step,
+                                        "restarts_forgiven": restarts})
+                    restarts = 0
                 if step % self.config.checkpoint_every == 0:
                     self.ckpt.save_async(step, state)
-            except (StragglerEvent, RuntimeError, OSError) as e:
+            except self._recoverable as e:
                 restarts += 1
+                ok_streak = 0
                 self.events.append({"kind": "restart", "step": step,
                                     "error": repr(e), "restart": restarts})
                 if restarts > self.config.max_restarts:
@@ -136,11 +166,16 @@ class Supervisor:
                 if last is None:
                     log.warning("no checkpoint yet; restarting from step %d", start_step)
                     step = start_step
+                    del history[:]  # those steps will be re-run
                     continue
                 log.warning("restoring step %d after failure at step %d", last, step)
                 state = self.ckpt.restore(state, step=last,
                                           shardings=self.state_shardings)
                 step = last
+                # drop rolled-back entries: they re-run from the restored
+                # step, and a history with duplicated steps mis-plots
+                while history and history[-1]["step"] >= last:
+                    history.pop()
         self.ckpt.wait()
         self.ckpt.save(step, state)
         return state, history

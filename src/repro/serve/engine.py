@@ -44,6 +44,14 @@ class EngineConfig:
     use_reference_ops: bool = True  # CPU-friendly default
     #: KV-arena backend: any ``repro.alloc`` registry key (or instance)
     allocator: object = "gmlake"
+    #: optional KV *accounting* geometry overrides (n_kv heads / head dim).
+    #: The model still executes on its own (smoke) shapes; these let a
+    #: scenario model the per-token KV footprint of a larger deployment —
+    #: e.g. few tokens per 2 MB chunk, so sequences grow across chunk
+    #: boundaries mid-decode and the arena sees mid-trace allocation
+    #: pressure (the kill/recover scenario needs this)
+    kv_n_kv: Optional[int] = None
+    kv_head_dim: Optional[int] = None
 
 
 class ServeEngine:
@@ -64,8 +72,8 @@ class ServeEngine:
         self.kv = StitchedKVCache(
             KVCacheConfig(
                 n_layers=getattr(cfg, "n_layers", 1),
-                n_kv=getattr(cfg, "n_kv", 1),
-                head_dim=getattr(cfg, "dh", 64),
+                n_kv=engine_cfg.kv_n_kv or getattr(cfg, "n_kv", 1),
+                head_dim=engine_cfg.kv_head_dim or getattr(cfg, "dh", 64),
                 dtype=jnp.bfloat16,
                 n_chunks=engine_cfg.n_chunks,
                 use_reference_ops=engine_cfg.use_reference_ops,
@@ -76,13 +84,22 @@ class ServeEngine:
         self._next_id = itertools.count()
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}
+        self.finished: List[Request] = []  # completion order
+        self._requests: Dict[int, Request] = {}  # every submitted request
         self._cache = None  # dense model cache for the running batch
         self._slot_of: Dict[int, int] = {}
+        self.steps = 0  # decode steps driven so far (dump/load identity)
+        # set while a step is mutating engine state; a crash mid-step
+        # leaves it set, forcing the next load_state to rebuild rather
+        # than trust the partially-mutated in-memory state
+        self._dirty = False
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
         rid = next(self._next_id)
-        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new)
+        self.waiting.append(req)
+        self._requests[rid] = req
         return rid
 
     # ------------------------------------------------------------------
@@ -112,14 +129,21 @@ class ServeEngine:
         self._slot_of[req.req_id] = slot
         return slot
 
-    def _merge_cache(self, slot: int, cache_1: Dict) -> None:
+    def _zeros_cache(self) -> Dict:
+        cache_1 = self.fam.init_cache(self.cfg, 1, self.ecfg.max_len)
+        return jax.tree.map(
+            lambda x: jnp.zeros((x.shape[0], self.ecfg.max_batch) + x.shape[2:],
+                                x.dtype)
+            if x.ndim >= 2 else jnp.zeros((self.ecfg.max_batch,), x.dtype),
+            cache_1,
+        )
+
+    def _ensure_cache(self) -> None:
         if self._cache is None:
-            self._cache = jax.tree.map(
-                lambda x: jnp.zeros((x.shape[0], self.ecfg.max_batch) + x.shape[2:],
-                                    x.dtype)
-                if x.ndim >= 2 else jnp.zeros((self.ecfg.max_batch,), x.dtype),
-                cache_1,
-            )
+            self._cache = self._zeros_cache()
+
+    def _merge_cache(self, slot: int, cache_1: Dict) -> None:
+        self._ensure_cache()
         def put(full, one):
             if one.ndim >= 2:  # (L, 1, ...) layer-stacked
                 return full.at[:, slot : slot + 1].set(one)
@@ -129,8 +153,11 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One decode step over the running batch. Returns #finished."""
+        self._dirty = True
         self._admit()
         if not self.running:
+            self.steps += 1
+            self._dirty = False
             return 0
         reqs = list(self.running.values())
         slots = [self._slot_of[r.req_id] for r in reqs]
@@ -148,26 +175,169 @@ class ServeEngine:
             if len(r.generated) >= r.max_new:
                 r.done = True
                 finished += 1
+                self.finished.append(r)
                 self.kv.free_sequence(r.req_id)
                 del self.running[r.req_id]
                 del self._slot_of[r.req_id]
+        self.steps += 1
+        self._dirty = False
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
-        done: List[Request] = []
+        """Drive ``step`` until every submitted request finishes (or the
+        step budget runs out); returns the requests that finished during
+        this call, in completion order."""
+        start = len(self.finished)
         for _ in range(max_steps):
             if not self.waiting and not self.running:
                 break
-            before = set(self.running)
             self.step()
-            for rid in before - set(self.running):
-                pass
-        return done
+        return self.finished[start:]
+
+    # ------------------------------------------------------------------
+    # checkpointable state (kill/recover path)
+    # ------------------------------------------------------------------
+    def dump_state(self) -> Dict[str, Any]:
+        """Engine state as a fixed-structure pytree for ``CheckpointManager``.
+
+        The layout (array shapes) is a function of the *submitted request
+        set*, so dumps are checkpoint-compatible as long as no new requests
+        arrive between save and restore — exactly the kill/recover serving
+        contract. Phase encoding: 0 waiting, 1 running, 2 finished.
+        """
+        self._ensure_cache()
+        reqs = [self._requests[rid] for rid in sorted(self._requests)]
+        n = len(reqs)
+        p_max = max((len(r.prompt) for r in reqs), default=1)
+        g_max = max((r.max_new for r in reqs), default=1)
+        prompt_tok = np.zeros((n, p_max), np.int32)
+        prompt_len = np.zeros((n,), np.int32)
+        gen_tok = np.zeros((n, g_max), np.int32)
+        gen_len = np.zeros((n,), np.int32)
+        max_new = np.zeros((n,), np.int32)
+        phase = np.zeros((n,), np.int32)
+        slot = np.full((n,), -1, np.int32)
+        for i, r in enumerate(reqs):
+            pl = len(r.prompt)
+            prompt_tok[i, :pl] = r.prompt
+            prompt_len[i] = pl
+            gl = len(r.generated)
+            gen_tok[i, :gl] = np.asarray(r.generated, np.int32)
+            gen_len[i] = gl
+            max_new[i] = r.max_new
+            if r.done:
+                phase[i] = 2
+            elif r.req_id in self.running:
+                phase[i] = 1
+                slot[i] = self._slot_of[r.req_id]
+        return {
+            "step": np.int32(self.steps),
+            "prompt_tok": prompt_tok,
+            "prompt_len": prompt_len,
+            "gen_tok": gen_tok,
+            "gen_len": gen_len,
+            "max_new": max_new,
+            "phase": phase,
+            "slot": slot,
+            "cache": self._cache,
+        }
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Restore engine + KV-arena accounting from a ``dump_state`` tree.
+
+        No-op when ``state`` describes the step the engine is already at
+        (and no step died half-way); otherwise a full rebuild: every live
+        KV sequence is freed and re-admitted tight against the (possibly
+        shrunken) device — the re-stitching defragmentation pass.
+        """
+        step = int(state["step"])
+        if step == self.steps and not self._dirty:
+            return
+        for sid in list(self.kv.seqs):
+            self.kv.free_sequence(sid)
+        self.waiting.clear()
+        self.running.clear()
+        self.finished.clear()
+        self._slot_of.clear()
+        prompt_tok = np.asarray(state["prompt_tok"])
+        prompt_len = np.asarray(state["prompt_len"])
+        gen_tok = np.asarray(state["gen_tok"])
+        gen_len = np.asarray(state["gen_len"])
+        max_new = np.asarray(state["max_new"])
+        phase = np.asarray(state["phase"])
+        slot = np.asarray(state["slot"])
+        running_rows = []
+        for i in range(prompt_tok.shape[0]):
+            rid = i  # req ids are dense: itertools.count() from 0
+            pl = int(prompt_len[i])
+            req = Request(rid, prompt_tok[i, :pl].astype(np.int32),
+                          int(max_new[i]))
+            req.generated = [int(t) for t in gen_tok[i, : int(gen_len[i])]]
+            self._requests[rid] = req
+            ph = int(phase[i])
+            if ph == 0:
+                self.waiting.append(req)
+            elif ph == 1:
+                self.running[rid] = req
+                self._slot_of[rid] = int(slot[i])
+                running_rows.append((rid, pl, len(req.generated)))
+            else:
+                req.done = True
+                self.finished.append(req)
+        # rebuild KV accounting exactly as admission would have: one
+        # add_sequence(prompt_len) then one append per decoded token
+        for rid, pl, gl in running_rows:
+            self.kv.add_sequence(rid, pl)
+            if gl > 1:
+                self.kv.append_tokens(rid, gl - 1)
+        self._cache = jax.tree.map(jnp.asarray, state["cache"])
+        self.steps = step
+        self._dirty = False
+        self.recorder.mark(f"engine.restore@{step}")
+
+    def run_supervised(self, ckpt, max_steps: int = 512,
+                       config=None) -> "Supervisor":
+        """Drive the engine to completion under a ``Supervisor``.
+
+        Each supervisor step is one engine decode step over the dumped
+        state; an ``AllocatorOOM`` (or any recoverable error) triggers
+        restore from the last committed checkpoint, and ``load_state``
+        rebuilds the KV arena tight on whatever capacity the device still
+        has. Returns the supervisor (its ``events`` log is the audit
+        trail the kill/recover scenario asserts on).
+        """
+        from ..ft.supervisor import Supervisor, SupervisorConfig
+
+        cfg = config if config is not None else SupervisorConfig(
+            checkpoint_every=4, max_restarts=8, restart_reset_after=8,
+        )
+
+        def step_fn(state, batch):
+            self.load_state(state)
+            self.step()
+            return self.dump_state(), {
+                "finished": float(len(self.finished)),
+                "running": float(len(self.running)),
+            }
+
+        sup = Supervisor(step_fn, lambda i: None, ckpt, cfg)
+        state = self.dump_state()
+        ckpt.save(0, state)  # a restore target exists before any step
+        done = 0
+        while (self.waiting or self.running) and done < max_steps:
+            chunk = min(cfg.checkpoint_every, max_steps - done)
+            state, _ = sup.run(state, done, chunk)
+            done += chunk
+            self.load_state(state)
+        return sup
 
     # ------------------------------------------------------------------
     def memory_report(self) -> Dict[str, Any]:
         alloc = self.kv.arena.allocator
         counts = getattr(alloc, "state_counts", None)  # gmlake-style backends
+        event_log = getattr(alloc, "event_log", None)
+        device = self.kv.arena.device_model
+        fault_counts = getattr(device, "fault_counts", None)
         return {
             "allocator": alloc.name,
             "reserved_bytes": alloc.reserved_bytes,
@@ -177,4 +347,10 @@ class ServeEngine:
             "utilization": alloc.stats.utilization,
             "state_counts": dict(counts) if counts is not None else None,
             "n_trace_events": len(self.recorder.trace),
+            "recovery_events": (event_log.summary()
+                                if event_log is not None and len(event_log)
+                                else None),
+            "injected_faults": (dict(fault_counts)
+                                if fault_counts else None),
+            "pending_unmaps": getattr(alloc, "pending_unmaps", 0),
         }

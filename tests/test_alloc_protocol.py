@@ -23,6 +23,9 @@ from repro.alloc import (
     Allocation,
     AllocatorOOM,
     AllocatorProtocol,
+    DeviceOOM,
+    FaultInjector,
+    FaultSchedule,
     VMMDevice,
     registry,
 )
@@ -33,6 +36,10 @@ BACKENDS = registry.names()
 
 def make(name: str, capacity=4 * GB, **kw):
     return registry.create(name, VMMDevice(capacity), **kw)
+
+
+def make_faulty(name: str, schedule: FaultSchedule, capacity=4 * GB, **kw):
+    return registry.create(name, FaultInjector(VMMDevice(capacity), schedule), **kw)
 
 
 @pytest.mark.parametrize("name", BACKENDS)
@@ -194,6 +201,108 @@ def test_stalloc_refuses_replanning_a_used_instance():
     with pytest.raises(RuntimeError, match="fresh backend"):
         a.prepare(tr)
     a.free(x)
+
+
+# ---------------------------------------------------------------------------
+# fault injection / staged recovery conformance
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_capability_registry():
+    """The recovery flag is declared where the ladder is implemented, and
+    ``with_capability`` surfaces it to backend-generic consumers."""
+    recovering = registry.with_capability("recovery")
+    assert set(recovering) == {"caching", "gmlake", "stalloc"}
+    assert "native" not in recovering
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_injected_faults_never_escape_as_raw_device_oom(name):
+    """The core fault contract: under a hostile schedule (every alloc-side
+    device call fails transiently) malloc must raise ``AllocatorOOM`` —
+    callers never see ``DeviceOOM``/``TransientDeviceError`` leak."""
+    a = make_faulty(name, FaultSchedule(seed=0, create_fail_prob=1.0))
+    try:
+        a.malloc(8 * MB)
+    except AllocatorOOM:
+        pass  # the contract: AllocatorOOM is a clean, catchable failure
+    except DeviceOOM as e:  # pragma: no cover - contract violation
+        pytest.fail(f"raw device error escaped {name}: {e!r}")
+    a.check_invariants()
+    assert a.stats.active_bytes == 0  # the failed request leaked nothing
+
+
+@pytest.mark.parametrize("name", registry.with_capability("recovery"))
+def test_transient_burst_absorbed_by_recovery_ladder(name):
+    """A burst shorter than the ladder's attempt budget is invisible to
+    the caller: malloc succeeds and the event log shows the recovery."""
+    sched = FaultSchedule(seed=0, fail_at_call=1, fail_burst=3)
+    a = make_faulty(name, sched)
+    x = a.malloc(8 * MB)
+    assert x.block_size >= 8 * MB
+    assert a.event_log.counts.get("recovered", 0) >= 1
+    assert a.event_log.counts.get("oom", 0) >= 1
+    a.free(x)
+    a.check_invariants()
+
+
+@pytest.mark.parametrize("name", registry.with_capability("recovery"))
+def test_fault_free_digests_identical_with_recovery_enabled(name):
+    """A/B bit-identity: compiling the recovery path in (recovery=True
+    over a plain device) must not perturb fault-free allocation policy."""
+    tr = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=2
+    )
+
+    def digest(res):
+        return (res.state_counts, res.stats.peak_active,
+                res.stats.peak_reserved, res.oom, res.oom_at_event,
+                res.stats.n_alloc, res.stats.n_free)
+
+    base, _ = replay(tr, name)
+    forced = registry.create(name, VMMDevice(40 * GB), recovery=True)
+    with_recovery, _ = replay(tr, forced)
+    assert digest(with_recovery) == digest(base)
+    assert len(forced.event_log) == 0  # no faults -> silent ladder
+
+
+@pytest.mark.parametrize(
+    "name,sched",
+    [
+        # gmlake walks its full ladder under scattered faults + shrink
+        ("gmlake", FaultSchedule(seed=3, create_fail_prob=0.1, burst=2,
+                                 shrink_at_call=20, shrink_bytes=64 * MB)),
+        # caching's segment-granular device calls need a denser schedule
+        ("caching", FaultSchedule(seed=0, create_fail_prob=0.5, burst=2,
+                                  shrink_at_call=3, shrink_bytes=64 * MB)),
+    ],
+)
+def test_seeded_fault_replay_completes(name, sched):
+    """Acceptance criterion: under a seeded schedule (transient cuMemCreate
+    failures + one mid-trace capacity shrink) the recorded serving trace
+    replays to completion on gmlake and caching, recovery events logged."""
+    from pathlib import Path
+
+    from repro.core.trace import load_trace
+
+    tr = load_trace(
+        Path(__file__).parent / "data" / "serve_engine_smollm.trace.json"
+    )
+    res, _ = replay(tr, name, capacity_bytes=256 * MB, fault_schedule=sched)
+    assert not res.oom
+    assert res.recovery is not None
+    assert res.recovery["counts"]["recovered"] >= 1
+    assert res.recovery["counts"].get("unrecovered", 0) == 0
+
+
+def test_fault_schedule_requires_registry_key():
+    """An already-built instance owns its device; silently re-wrapping it
+    would not inject anything, so it's a loud error instead."""
+    a = make("caching")
+    with pytest.raises(ValueError, match="fault_schedule"):
+        replay(training_trace(
+            PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=1
+        ), a, fault_schedule=FaultSchedule(seed=0))
 
 
 def test_arena_data_paths_require_stitching_capability():

@@ -141,6 +141,102 @@ def test_supervisor_restart_budget(tmp_path):
         sup.run({"w": jnp.float32(0.0)}, 0, 5, fail_injector=injector)
 
 
+def test_supervisor_config_is_per_instance(tmp_path):
+    """The default config must be built per Supervisor — a shared mutable
+    default would leak tweaks (e.g. a bumped restart budget) across every
+    supervisor in the process."""
+    data = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=2))
+    mgr = CheckpointManager(tmp_path)
+    a = Supervisor(make_step(), data.batch_at, mgr)
+    b = Supervisor(make_step(), data.batch_at, mgr)
+    assert a.config is not b.config
+    a.config.max_restarts = 99
+    assert b.config.max_restarts == SupervisorConfig().max_restarts
+
+
+def test_straggler_window_and_warmup_plumbed_from_config(tmp_path):
+    data = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=2))
+    mgr = CheckpointManager(tmp_path)
+    sup = Supervisor(
+        make_step(), data.batch_at, mgr,
+        SupervisorConfig(straggler_factor=2.5, straggler_window=5,
+                         straggler_warmup=2),
+    )
+    assert sup.detector.factor == 2.5
+    assert sup.detector.window == 5
+    assert sup.detector.warmup == 2
+
+
+def test_straggler_window_bounds_the_median(tmp_path):
+    """Old samples age out of the rolling window: after `window` fast
+    steps the earlier slow regime no longer drags the median up."""
+    t = [0.0]
+    det = StragglerDetector(factor=3.0, window=4, warmup=2,
+                            clock=lambda: t[0])
+    for i, dt in enumerate([8.0, 8.0, 8.0, 1.0, 1.0, 1.0, 1.0]):
+        det.start()
+        t[0] += dt
+        det.stop(i)
+    assert det.times == [1.0, 1.0, 1.0, 1.0]
+    det.start()
+    t[0] += 4.0  # 4x the current median of 1.0 -> fires
+    assert det.stop(99) is not None
+
+
+def test_restart_history_has_strictly_increasing_steps(tmp_path):
+    """After restore the rolled-back history entries are dropped, so the
+    returned history never contains duplicated or out-of-order steps."""
+    data = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=2))
+    crashes = {8, 13}
+
+    def injector(step):
+        if step in crashes:
+            crashes.discard(step)
+            raise RuntimeError(f"boom at {step}")
+
+    mgr = CheckpointManager(tmp_path)
+    sup = Supervisor(make_step(), data.batch_at, mgr,
+                     SupervisorConfig(checkpoint_every=5))
+    _, history = sup.run({"w": jnp.float32(0.0)}, 0, 20,
+                         fail_injector=injector)
+    steps = [h["step"] for h in history]
+    assert steps == list(range(20))  # no duplicates from the replays
+
+
+def test_restart_budget_resets_after_clean_streak(tmp_path):
+    """Spaced transient failures must not accumulate against the budget:
+    with ``restart_reset_after`` set, a long run survives one failure per
+    epoch; without it the same pattern exhausts ``max_restarts``."""
+    data = SyntheticTokens(DataConfig(vocab=97, seq_len=8, global_batch=2))
+
+    def make_injector():
+        crashes = {5, 15}
+
+        def injector(step):
+            if step in crashes:
+                crashes.discard(step)
+                raise RuntimeError(f"flake at {step}")
+
+        return injector
+
+    cfg = SupervisorConfig(checkpoint_every=2, max_restarts=1,
+                           restart_reset_after=3)
+    sup = Supervisor(make_step(), data.batch_at,
+                     CheckpointManager(tmp_path / "reset"), cfg)
+    _, history = sup.run({"w": jnp.float32(0.0)}, 0, 20,
+                         fail_injector=make_injector())
+    assert [h["step"] for h in history] == list(range(20))
+    assert any(e["kind"] == "budget_reset" for e in sup.events)
+
+    legacy = SupervisorConfig(checkpoint_every=2, max_restarts=1,
+                              restart_reset_after=None)
+    sup2 = Supervisor(make_step(), data.batch_at,
+                      CheckpointManager(tmp_path / "legacy"), legacy)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup2.run({"w": jnp.float32(0.0)}, 0, 20,
+                 fail_injector=make_injector())
+
+
 # ---------------------------------------------------------------------------
 # data pipeline determinism / sharding
 # ---------------------------------------------------------------------------

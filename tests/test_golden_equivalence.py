@@ -47,6 +47,15 @@ ENGINE_TRACE_PATH = (
     Path(__file__).parent / "data" / "serve_engine_smollm.trace.json"
 )
 
+#: Kill/recover scenario recording (examples/kill_recover_serving.py): a
+#: fault-injected engine run with a supervisor restore mid-trace, so the
+#: stream carries the restore's free/re-alloc churn and engine.restore
+#: marks. Replayed here fault-free: digests pin that the *trace shape*
+#: (and every backend's handling of it) stays put.
+KILLRECOVER_TRACE_PATH = (
+    Path(__file__).parent / "data" / "serve_engine_killrecover.trace.json"
+)
+
 # (trace key, allocator backend, capacity GB) -> pinned digest.
 # state_counts is None for backends without Algorithm-1 state tracking.
 GOLDEN = {
@@ -166,6 +175,28 @@ GOLDEN = {
         peak_active=100663296, peak_reserved=100663296,
         oom=False, oom_at_event=None, n_alloc=288, n_free=288,
     ),
+    # -- kill/recover scenario recording (restore churn mid-trace): all
+    # KV grows are single-chunk, so gmlake is S1/S4-only here too --------
+    ("serve_engine_killrecover", "caching", 1): dict(
+        state_counts=None,
+        peak_active=75497472, peak_reserved=83886080,
+        oom=False, oom_at_event=None, n_alloc=90, n_free=90,
+    ),
+    ("serve_engine_killrecover", "native", 1): dict(
+        state_counts=None,
+        peak_active=75497472, peak_reserved=75497472,
+        oom=False, oom_at_event=None, n_alloc=90, n_free=90,
+    ),
+    ("serve_engine_killrecover", "gmlake", 1): dict(
+        state_counts={"S1": 54, "S2": 0, "S3": 0, "S4": 36, "S5": 0},
+        peak_active=75497472, peak_reserved=75497472,
+        oom=False, oom_at_event=None, n_alloc=90, n_free=90,
+    ),
+    ("serve_engine_killrecover", "stalloc", 1): dict(
+        state_counts=None,
+        peak_active=75497472, peak_reserved=75497472,
+        oom=False, oom_at_event=None, n_alloc=90, n_free=90,
+    ),
 }
 
 def test_registry_is_fully_pinned():
@@ -191,6 +222,8 @@ def _trace(key):
         return inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=2000, seed=0)
     if key == "serve_engine_smollm":
         return load_trace(ENGINE_TRACE_PATH)
+    if key == "serve_engine_killrecover":
+        return load_trace(KILLRECOVER_TRACE_PATH)
     raise KeyError(key)
 
 
