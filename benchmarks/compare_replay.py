@@ -17,6 +17,15 @@ The gate is **two-tier**, modeled cost first, wall time second:
   2. ``us_per_call`` — host wall time, the number users feel, but noisy
      (~±20 % on a loaded runner). Gated at the looser ``--threshold``.
 
+A **serving** tier activates when both ``--serving-baseline`` and
+``--serving-candidate`` point at BENCH_serving.json files (see
+``benchmarks/bench_serving.py``): per-backend, per-SLO-class modeled
+TTFT/TPOT percentiles plus modeled cost / peak reserved / deferral counts
+are deterministic functions of the seeded schedule, so drift beyond
+``--model-threshold`` **blocks** (subject to ``--annotate-only``); wall
+time only ever warns. A changed load config skips the tier rather than
+comparing incomparables.
+
 A third, **informational** tier compares named hotspot terms from
 ``BENCH_profile.json`` files (see ``benchmarks/bench_profile.py``) when
 both ``--profile-baseline`` and ``--profile-candidate`` are readable:
@@ -144,6 +153,99 @@ def _profile_tier(profile_baseline, profile_candidate, threshold) -> None:
               f"baseline, call counts unchanged")
 
 
+def compare_serving(baseline: dict, candidate: dict, model_threshold: float):
+    """Diff two BENCH_serving.json payloads (see bench_serving.multitenant).
+
+    Returns (regressions, warnings) as lists of human-readable findings.
+    Modeled per-class TTFT/TPOT percentiles are deterministic functions of
+    (schedule, backend policy), so they gate at the tight modeled
+    threshold; wall time is load-noise and only ever warns.
+    """
+    base = {r["allocator"]: r for r in baseline.get("backends", [])}
+    regressions, warnings = [], []
+    for row in candidate.get("backends", []):
+        name = row["allocator"]
+        old = base.get(name)
+        if old is None:
+            warnings.append(f"serving/{name}: no baseline row (new backend?)")
+            continue
+        for cls in sorted(row.get("per_class", {})):
+            new_c = row["per_class"][cls]
+            old_c = (old.get("per_class") or {}).get(cls)
+            if old_c is None:
+                continue
+            for metric in ("ttft_ms_p50", "ttft_ms_p95",
+                           "tpot_ms_p50", "tpot_ms_p95"):
+                ov, nv = old_c.get(metric), new_c.get(metric)
+                if not ov or nv is None:
+                    continue
+                ratio = nv / ov
+                if ratio > 1.0 + model_threshold:
+                    regressions.append(
+                        f"serving/{name}/{cls}/{metric}: "
+                        f"{ov:.1f} -> {nv:.1f} modeled ms ({ratio:.3f}x)"
+                    )
+        for metric in ("model_cost", "peak_reserved", "deferrals"):
+            ov, nv = old.get(metric), row.get(metric)
+            if ov is None or nv is None:
+                continue
+            if ov == 0:
+                # count metrics can regress from a clean zero baseline,
+                # where a ratio is undefined: any appearance blocks
+                if nv > 0:
+                    regressions.append(
+                        f"serving/{name}/{metric}: 0 -> {nv:.0f}"
+                    )
+                continue
+            ratio = nv / ov
+            if ratio > 1.0 + model_threshold:
+                regressions.append(
+                    f"serving/{name}/{metric}: {ov:.0f} -> {nv:.0f} "
+                    f"({ratio:.3f}x)"
+                )
+        ow, nw = old.get("wall_seconds"), row.get("wall_seconds")
+        if ow and nw and nw / ow > 1.5:
+            warnings.append(
+                f"serving/{name}: wall {ow:.2f}s -> {nw:.2f}s "
+                f"({nw / ow:.2f}x; informational — wall is load-sensitive)"
+            )
+    return regressions, warnings
+
+
+def _serving_tier(serving_baseline, serving_candidate, model_threshold,
+                  annotate_only) -> int:
+    """Run the serving TTFT/TPOT tier. Returns the number of blocking
+    regressions (0 under --annotate-only or with no usable baseline)."""
+    try:
+        with open(serving_baseline) as f:
+            base = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::warning::serving perf diff skipped (no usable baseline): {e}")
+        return 0
+    try:
+        with open(serving_candidate) as f:
+            cand = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::error::serving perf candidate unreadable: {e}")
+        return 1
+    if base.get("load") != cand.get("load"):
+        # different schedule shapes are incomparable, not a regression
+        print("::warning::serving perf diff skipped (load config changed)")
+        return 0
+    regressions, warns = compare_serving(base, cand, model_threshold)
+    for w in warns:
+        print(f"::warning::{w}")
+    level = "warning" if annotate_only else "error"
+    for r in regressions:
+        print(f"::{level}::serving modeled regression {r} "
+              f"(threshold {1.0 + model_threshold:.2f}x)")
+    if not regressions:
+        print(f"serving perf: {len(cand.get('backends', []))} backends "
+              f"within {model_threshold:.0%} of baseline on modeled "
+              f"TTFT/TPOT, cost and peak")
+    return 0 if annotate_only else len(regressions)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="previous run's BENCH_replay.json")
@@ -174,11 +276,26 @@ def main(argv=None) -> int:
         help="cumtime ratio that warn-annotates a named hotspot term "
         "(informational tier: never affects the exit code)",
     )
+    ap.add_argument(
+        "--serving-baseline", default=None,
+        help="previous run's BENCH_serving.json (modeled TTFT/TPOT tier)",
+    )
+    ap.add_argument(
+        "--serving-candidate", default=None,
+        help="this run's BENCH_serving.json (modeled TTFT/TPOT tier)",
+    )
     args = ap.parse_args(argv)
 
     if args.profile_baseline and args.profile_candidate:
         _profile_tier(
             args.profile_baseline, args.profile_candidate, args.profile_threshold
+        )
+
+    serving_regressions = 0
+    if args.serving_baseline and args.serving_candidate:
+        serving_regressions = _serving_tier(
+            args.serving_baseline, args.serving_candidate,
+            args.model_threshold, args.annotate_only,
         )
 
     try:  # a missing/unreadable *baseline* must never block the build
@@ -187,7 +304,7 @@ def main(argv=None) -> int:
         _rows(baseline)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"::warning::replay perf diff skipped (no usable baseline): {e}")
-        return 0
+        return 1 if serving_regressions else 0
     try:  # an unreadable *candidate* is a real defect in this very run
         with open(args.candidate) as f:
             candidate = json.load(f)
@@ -214,7 +331,8 @@ def main(argv=None) -> int:
         print(f"replay perf: {len(candidate.get('rows', []))} rows within "
               f"thresholds (model {args.model_threshold:.0%}, "
               f"wall {args.threshold:.0%}) of baseline")
-    return 1 if regressions and not args.annotate_only else 0
+    blocking = (regressions and not args.annotate_only) or serving_regressions
+    return 1 if blocking else 0
 
 
 if __name__ == "__main__":

@@ -32,6 +32,58 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 from repro.configs import get_arch  # noqa: E402
 from repro.models.api import family_of  # noqa: E402
 from repro.serve.engine import EngineConfig, ServeEngine  # noqa: E402
+from repro.serve.loadgen import LoadGenConfig, generate  # noqa: E402
+
+
+def record_multitenant(seed: int = 2):
+    """Loadgen-driven multi-tenant run: the trace carries tenant/SLO
+    columns and mixes small interactive KV growth (2-4 MB, the stitching
+    core's regime) with large batch-class prompt allocations (>=16 MB,
+    ellm's elastic-arena regime), so one recorded stream exercises every
+    backend's interesting path.
+
+    The KV geometry is widened (kv_n_kv=64, kv_head_dim=512 -> 64 KB per
+    token per layer side) so a 256-token batch prompt is an 8-chunk,
+    16 MB allocation per (layer, k|v) — loadgen's class mix, scaled to
+    the engine's max_len, does the rest.
+    """
+    entry = get_arch("smollm-135m")
+    cfg = entry.smoke
+    fam = family_of(cfg)
+    rng = np.random.default_rng(seed)
+    params = fam.init_params(cfg, jax.random.PRNGKey(seed))
+    eng = ServeEngine(
+        cfg, params,
+        EngineConfig(max_batch=6, max_len=1024, n_chunks=1024,
+                     kv_n_kv=64, kv_head_dim=512),
+    )
+    load = LoadGenConfig(seed=seed, duration_steps=48, n_tenants=4,
+                         base_arrivals_per_step=1.0, bursts=((16, 3.0, 4),))
+    sched = generate(load)
+    by_step = {}
+    for spec in sched:
+        by_step.setdefault(spec.step, []).append(spec)
+    steps = 0
+    for step in range(load.duration_steps):
+        for spec in by_step.get(step, ()):
+            plen = min(480, max(8, spec.prompt_tokens // 3))
+            max_new = min(40, max(3, spec.decode_tokens // 8))
+            eng.submit(rng.integers(0, cfg.vocab, size=plen),
+                       max_new=max_new, tenant=spec.tenant, slo=spec.slo)
+        eng.step()
+        steps += 1
+    while eng.waiting or eng.running:
+        eng.step()
+        steps += 1
+        if steps > 10_000:
+            raise RuntimeError("engine did not drain")
+    trace = eng.recorder.trace
+    trace.meta.update(
+        arch=cfg.name, scenario="multitenant", seed=seed,
+        requests=len(sched), decode_steps=steps,
+        load=load.describe(),
+    )
+    return trace
 
 
 def record(requests: int = 48, max_new: int = 24, seed: int = 0):
@@ -60,18 +112,24 @@ def record(requests: int = 48, max_new: int = 24, seed: int = 0):
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument(
-        "--out",
-        default=str(
-            Path(__file__).resolve().parent.parent
-            / "tests" / "data" / "serve_engine_smollm.trace.json"
-        ),
-    )
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--scenario", choices=("default", "multitenant"),
+                    default="default")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
-    trace = record(args.requests, args.max_new, args.seed)
+    data_dir = Path(__file__).resolve().parent.parent / "tests" / "data"
+    if args.scenario == "multitenant":
+        trace = record_multitenant(2 if args.seed is None else args.seed)
+        out_default = data_dir / "serve_engine_multitenant.trace.json"
+    else:
+        trace = record(args.requests, args.max_new,
+                       0 if args.seed is None else args.seed)
+        out_default = data_dir / "serve_engine_smollm.trace.json"
+    if args.out is not None:
+        out_default = Path(args.out)
+    args.out = str(out_default)
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     trace.save(out)

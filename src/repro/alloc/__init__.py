@@ -19,6 +19,9 @@ Layout (bottom-up):
                      (the paper's contribution, §3–§4)
   stalloc            "stalloc" backend — spatio-temporal planning from a
                      profiled trace (after arXiv 2507.16274)
+  ellm               "ellm" backend — elastic weight arena that inflates/
+                     deflates its reservation with admission pressure and
+                     spills to VMS stitching (after arXiv 2506.15155)
 
 Adding a backend: subclass nothing — implement the protocol, decorate the
 class with ``@registry.register("yourname", AllocatorCapabilities(...))``,
@@ -68,6 +71,7 @@ from .caching_allocator import (
 )
 from .gmlake import GMLakeAllocator, PBlock, SBlock
 from .stalloc import PlacementPlan, PlannedBlock, STAllocAllocator, build_plan
+from .ellm import ELLMAllocator, ElasticBlock
 
 __all__ = [
     "registry",
@@ -108,4 +112,6 @@ __all__ = [
     "PlannedBlock",
     "STAllocAllocator",
     "build_plan",
+    "ELLMAllocator",
+    "ElasticBlock",
 ]

@@ -326,9 +326,19 @@ class VMMDevice:
         return va
 
     def cu_mem_create(self, n: int) -> List[int]:
-        """Create ``n`` physical chunks; ids are NOT contiguous in general."""
-        if n > len(self._free_chunks):
-            raise DeviceOOM(f"cuMemCreate({n} chunks) with {len(self._free_chunks)} free")
+        """Create ``n`` physical chunks; ids are NOT contiguous in general.
+
+        The free-chunk inventory alone is not the capacity check: segment
+        bytes held via ``cu_malloc`` never leave the chunk pool, so a
+        backend mixing large segments with VMM chunks (ellm's elastic
+        arena atop a GMLake core) could otherwise reserve past physical
+        capacity. Chunk creation therefore also respects ``free_bytes``.
+        """
+        if n > len(self._free_chunks) or n * self.chunk_size > self.free_bytes:
+            raise DeviceOOM(
+                f"cuMemCreate({n} chunks) with {len(self._free_chunks)} free "
+                f"chunks, {self.free_bytes} free bytes"
+            )
         chunks = [self._free_chunks.pop() for _ in range(n)]
         self.ledger.charge("cuMemCreate", n * _per_call_cost("cuMemCreate", self.chunk_size), n)
         return chunks

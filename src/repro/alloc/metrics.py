@@ -105,6 +105,14 @@ class AllocatorEventLog:
     def __len__(self) -> int:
         return len(self.events)
 
+    def clear(self) -> None:
+        """Drop accumulated events/counts *in place* — composite backends
+        share one log object, so reassignment would silently fork the
+        stream. The serving engine calls this on restore: post-restore
+        memory reports describe the new life only."""
+        self.events.clear()
+        self.counts.clear()
+
     def summary(self) -> dict:
         return {"n_events": len(self.events), "counts": dict(self.counts)}
 

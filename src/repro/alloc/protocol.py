@@ -65,6 +65,11 @@ class AllocatorCapabilities:
     #: surfacing the first ``DeviceOOM``; auto-enabled under a
     #: fault-injecting device, opt-in (``recovery=True``) otherwise
     recovery: bool = False
+    #: elastically inflates/deflates its device reservation with demand
+    #: (eLLM-style): grows the arena under pressure and — the honesty
+    #: contract pinned by the conformance suite — shrinks it back after
+    #: sustained deflation, without an explicit ``release_cached()`` call
+    elastic: bool = False
 
 
 @runtime_checkable

@@ -22,6 +22,7 @@ from ..alloc import (
     AllocatorStats,
     CachingAllocator,
     DeviceOOM,
+    ELLMAllocator,
     Extent,
     GMLakeAllocator,
     NativeAllocator,
@@ -81,6 +82,7 @@ __all__ = [
     "PlacementPlan",
     "STAllocAllocator",
     "build_plan",
+    "ELLMAllocator",
     "registry",
     "AllocatorStats",
     "ReplayResult",

@@ -67,6 +67,12 @@ class TraceEvent:
     tid: int
     size: int = 0
     label: str = ""
+    #: multi-tenant serving provenance (empty outside serving recordings):
+    #: which tenant issued the request and its SLO class name. Optional
+    #: columns in the JSON form — absent entirely when every value is
+    #: empty, so pre-multitenant recordings round-trip byte-identical.
+    tenant: str = ""
+    slo: str = ""
 
 
 @dataclass
@@ -126,7 +132,7 @@ class Trace:
         without re-running the engine (or needing jax at test time).
         """
         ops, tids, sizes, labels = self.compiled()
-        return {
+        payload = {
             "format": "repro.trace.v1",
             "meta": self.meta,
             "ops": ops,
@@ -134,16 +140,26 @@ class Trace:
             "sizes": sizes,
             "labels": labels,
         }
+        # optional multi-tenant columns: only materialized when any event
+        # carries them, so pre-multitenant files stay byte-identical
+        if any(e.tenant or e.slo for e in self.events):
+            payload["tenants"] = [e.tenant for e in self.events]
+            payload["slos"] = [e.slo for e in self.events]
+        return payload
 
     @classmethod
     def from_jsonable(cls, payload: dict) -> "Trace":
         if payload.get("format") != "repro.trace.v1":
             raise ValueError(f"not a repro trace payload: {payload.get('format')!r}")
         op_names = {v: k for k, v in _OP_CODES.items()}
+        n = len(payload["ops"])
+        tenants = payload.get("tenants", [""] * n)
+        slos = payload.get("slos", [""] * n)
         events = [
-            TraceEvent(op_names[op], tid, size, label)
-            for op, tid, size, label in zip(
-                payload["ops"], payload["tids"], payload["sizes"], payload["labels"]
+            TraceEvent(op_names[op], tid, size, label, tenant, slo)
+            for op, tid, size, label, tenant, slo in zip(
+                payload["ops"], payload["tids"], payload["sizes"],
+                payload["labels"], tenants, slos,
             )
         ]
         return cls(events=events, meta=dict(payload.get("meta", {})))
@@ -168,12 +184,25 @@ class TraceRecorder:
         self.trace = Trace(meta=dict(meta))
         self._next_tid = itertools.count()
         self.live: Dict[int, int] = {}
+        self._ctx_tenant = ""
+        self._ctx_slo = ""
+
+    def set_context(self, tenant: str = "", slo: str = "") -> None:
+        """Set the tenant/SLO stamped on subsequent allocs (serving uses
+        this around KV-cache calls so deep allocation sites need no
+        plumbing). Clear by calling with defaults."""
+        self._ctx_tenant = tenant
+        self._ctx_slo = slo
 
     def alloc(self, size: int, label: str = "") -> int:
         assert size > 0, f"alloc of size {size}"
         tid = next(self._next_tid)
         self.live[tid] = size
-        self.trace.events.append(TraceEvent(ALLOC, tid, int(size), label))
+        self.trace.events.append(
+            TraceEvent(
+                ALLOC, tid, int(size), label, self._ctx_tenant, self._ctx_slo
+            )
+        )
         return tid
 
     def free(self, tid: int) -> None:

@@ -26,6 +26,15 @@ from ..core.trace import TraceRecorder
 from ..models.api import family_of
 
 
+#: Admission priority per SLO class (lower admits first). Classes are
+#: defined by ``repro.serve.loadgen.SLO_CLASSES``; requests with an empty
+#: or unknown class share the default rank, so single-tenant workloads
+#: (and the pre-multitenant recorded traces) keep exact FIFO order —
+#: the sort below is stable.
+SLO_PRIORITY = {"interactive": 0, "standard": 1, "batch": 2}
+_DEFAULT_PRIORITY = 1
+
+
 @dataclass
 class Request:
     req_id: int
@@ -33,6 +42,14 @@ class Request:
     max_new: int
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # multi-tenant metadata + per-life latency accounting (engine steps).
+    # Not part of dump_state: a restore starts a fresh latency life, the
+    # same contract as the memory-report event counters.
+    tenant: str = ""
+    slo: str = ""
+    submit_step: int = 0
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
 
 
 @dataclass
@@ -95,19 +112,30 @@ class ServeEngine:
         self._dirty = False
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int = 32,
+               tenant: str = "", slo: str = "") -> int:
         rid = next(self._next_id)
-        req = Request(rid, np.asarray(prompt, np.int32), max_new)
+        req = Request(rid, np.asarray(prompt, np.int32), max_new,
+                      tenant=tenant, slo=slo, submit_step=self.steps)
         self.waiting.append(req)
         self._requests[rid] = req
         return rid
 
     # ------------------------------------------------------------------
     def _admit(self) -> None:
+        # SLO-class admission: interactive ahead of standard ahead of
+        # batch; the sort is stable, so same-class requests (and every
+        # request of an SLO-free workload) stay strictly FIFO
+        if len(self.waiting) > 1 and any(r.slo for r in self.waiting):
+            self.waiting.sort(
+                key=lambda r: SLO_PRIORITY.get(r.slo, _DEFAULT_PRIORITY)
+            )
         while self.waiting and len(self.running) < self.ecfg.max_batch:
             req = self.waiting.pop(0)
             self.running[req.req_id] = req
+            self.recorder.set_context(req.tenant, req.slo)
             self.kv.add_sequence(req.req_id, len(req.prompt))
+            self.recorder.set_context()
             slot = self._alloc_slot(req)
             # dense prefill for this request alone (simple; batched prefill
             # is an optimization the engine does not need for correctness)
@@ -118,6 +146,8 @@ class ServeEngine:
             )
             tok = int(jnp.argmax(logits[0, -1]))
             req.generated.append(tok)
+            if req.first_token_step is None:
+                req.first_token_step = self.steps
             self._merge_cache(slot, cache)
 
     def _alloc_slot(self, req: Request) -> int:
@@ -171,9 +201,12 @@ class ServeEngine:
         for r, s in zip(reqs, slots):
             tok = int(jnp.argmax(logits[s]))
             r.generated.append(tok)
+            self.recorder.set_context(r.tenant, r.slo)
             self.kv.append_tokens(r.req_id, 1)
+            self.recorder.set_context()
             if len(r.generated) >= r.max_new:
                 r.done = True
+                r.finish_step = self.steps
                 finished += 1
                 self.finished.append(r)
                 self.kv.free_sequence(r.req_id)
@@ -253,6 +286,15 @@ class ServeEngine:
         step = int(state["step"])
         if step == self.steps and not self._dirty:
             return
+        # a real restore starts a new reporting life: recovery/event-log
+        # counters accumulated before the crash must not leak into
+        # post-restore memory reports (device-side fault counters are
+        # device-lifetime and deliberately survive). The clear happens
+        # before the rebuild below, so recoveries the rebuild itself walks
+        # are counted as post-restore events.
+        log = getattr(self.kv.arena.allocator, "event_log", None)
+        if log is not None:
+            log.clear()
         for sid in list(self.kv.seqs):
             self.kv.free_sequence(sid)
         self.waiting.clear()
@@ -332,7 +374,45 @@ class ServeEngine:
         return sup
 
     # ------------------------------------------------------------------
+    def latency_report(self) -> Dict[str, Any]:
+        """Per-SLO-class TTFT/TPOT in engine decode steps.
+
+        TTFT counts submit -> first token inclusive (a request admitted
+        and prefilled in the step after submission scores 1); TPOT is the
+        mean decode interval over a finished request's generated tokens.
+        Requests with no SLO class report under ``"default"``. Latency
+        metadata lives per engine life (restores reset it), mirroring the
+        memory-report event counters.
+        """
+        per: Dict[str, Dict[str, List[float]]] = {}
+        for rid in sorted(self._requests):
+            r = self._requests[rid]
+            if r.first_token_step is None:
+                continue
+            d = per.setdefault(r.slo or "default", {"ttft": [], "tpot": []})
+            d["ttft"].append(float(r.first_token_step - r.submit_step + 1))
+            if r.finish_step is not None and len(r.generated) > 1:
+                d["tpot"].append(
+                    (r.finish_step - r.first_token_step)
+                    / (len(r.generated) - 1)
+                )
+        report: Dict[str, Any] = {}
+        for cls, d in sorted(per.items()):
+            ttft, tpot = d["ttft"], d["tpot"]
+            report[cls] = {
+                "n": len(ttft),
+                "ttft_steps_mean": sum(ttft) / len(ttft),
+                "ttft_steps_max": max(ttft),
+                "tpot_steps_mean": (sum(tpot) / len(tpot)) if tpot else None,
+                "tpot_steps_max": max(tpot) if tpot else None,
+            }
+        return report
+
+    # ------------------------------------------------------------------
     def memory_report(self) -> Dict[str, Any]:
+        """Allocator-side report. ``recovery_events`` covers the current
+        engine life (restores clear it); ``injected_faults`` is
+        device-lifetime."""
         alloc = self.kv.arena.allocator
         counts = getattr(alloc, "state_counts", None)  # gmlake-style backends
         event_log = getattr(alloc, "event_log", None)

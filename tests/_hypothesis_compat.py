@@ -1,10 +1,19 @@
 """Optional-hypothesis shim for the property-based tests.
 
 ``hypothesis`` lives in the ``dev`` extra (see pyproject.toml) but must not
-be a hard requirement for collecting the suite: without it, ``given``
-becomes a skip marker and ``st`` a stand-in that absorbs any strategy
-composition, so the property tests skip cleanly instead of killing
-collection with ModuleNotFoundError.
+be a hard requirement for the suite: when it is installed, this module
+re-exports the real ``given``/``settings``/``st``. Without it, a small
+deterministic fallback takes over — each ``@given`` test runs
+``max_examples`` seeded examples drawn from miniature strategy objects, so
+the property tests *run* (and can fail) instead of skipping. The fallback
+seeds each example from the stable string ``"<module>.<test>:<index>"``,
+so counterexamples are reproducible across runs and platforms.
+
+The fallback implements exactly the strategy surface the suite uses:
+``st.integers`` (positional or keyword bounds), ``st.sampled_from``,
+``st.lists(..., unique=..., min_size=..., max_size=...)`` and
+``@st.composite``. ``settings(max_examples=..., deadline=...)`` works in
+either decorator order relative to ``given``.
 """
 
 try:
@@ -12,26 +21,116 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import pytest
+    import random
 
     HAVE_HYPOTHESIS = False
 
-    class _AnyStrategy:
-        """Absorbs strategy construction: st.lists(...), st.composite, etc."""
+    _DEFAULT_MAX_EXAMPLES = 50
 
-        def __call__(self, *args, **kwargs):
-            return self
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
 
-        def __getattr__(self, name):
-            return self
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=0):
+            self.min_value = int(min_value)
+            self.max_value = int(max_value)
 
-    st = _AnyStrategy()
+        def example(self, rng):
+            return rng.randint(self.min_value, self.max_value)
 
-    def given(*_args, **_kwargs):
-        return pytest.mark.skip(reason="hypothesis is not installed")
+    class _SampledFrom(_Strategy):
+        def __init__(self, choices):
+            self.choices = list(choices)
 
-    def settings(*_args, **_kwargs):
+        def example(self, rng):
+            return self.choices[rng.randrange(len(self.choices))]
+
+    class _Lists(_Strategy):
+        def __init__(self, inner, min_size=0, max_size=10, unique=False):
+            self.inner = inner
+            self.min_size = min_size
+            self.max_size = max_size
+            self.unique = unique
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            if not self.unique:
+                return [self.inner.example(rng) for _ in range(n)]
+            seen, out = set(), []
+            # bounded draw budget: a narrow value domain may not hold n
+            # distinct values, so settle for what fits
+            for _ in range(4 * n + 16):
+                if len(out) >= n:
+                    break
+                v = self.inner.example(rng)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+
+    class _Composite(_Strategy):
+        def __init__(self, fn, args, kwargs):
+            self.fn = fn
+            self.args = args
+            self.kwargs = kwargs
+
+        def example(self, rng):
+            return self.fn(lambda s: s.example(rng), *self.args, **self.kwargs)
+
+    def _composite(fn):
+        def make(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+
+        return make
+
+    class _StrategyNamespace:
+        integers = staticmethod(_Integers)
+        sampled_from = staticmethod(_SampledFrom)
+        lists = staticmethod(_Lists)
+        composite = staticmethod(_composite)
+
+    st = _StrategyNamespace()
+
+    def given(*strategies):
         def deco(fn):
+            # *outer* collects whatever pytest passes positionally — for a
+            # method-style test that is the instance (``self``) — and is
+            # forwarded ahead of the drawn strategy values, matching real
+            # hypothesis's method support
+            def runner(*outer):
+                opts = getattr(runner, "_hc_settings", None)
+                if opts is None:
+                    opts = getattr(fn, "_hc_settings", {})
+                n = opts.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                base = f"{fn.__module__}.{fn.__qualname__}"
+                for i in range(n):
+                    rng = random.Random(f"{base}:{i}")
+                    args = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*outer, *args)
+                    except BaseException:
+                        print(
+                            f"[hypothesis-compat] falsifying example "
+                            f"#{i} (seed {base}:{i}): {args!r}"
+                        )
+                        raise
+
+            # deliberately not functools.wraps: __wrapped__ would make
+            # pytest introspect the original parametrized signature and
+            # demand fixtures for the strategy arguments
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner._hc_examples = True
+            return runner
+
+        return deco
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._hc_settings = dict(kwargs)
             return fn
 
         return deco

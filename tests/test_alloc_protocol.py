@@ -212,7 +212,7 @@ def test_recovery_capability_registry():
     """The recovery flag is declared where the ladder is implemented, and
     ``with_capability`` surfaces it to backend-generic consumers."""
     recovering = registry.with_capability("recovery")
-    assert set(recovering) == {"caching", "gmlake", "stalloc"}
+    assert set(recovering) == {"caching", "gmlake", "stalloc", "ellm"}
     assert "native" not in recovering
 
 
@@ -321,3 +321,59 @@ def test_arena_data_paths_require_stitching_capability():
     alloc_g = arena_g.alloc_elems(1024)
     assert arena_g.chunk_map(alloc_g).shape[0] >= 1  # gmlake: extents flow
     arena_g.free(alloc_g)
+
+
+# ---------------------------------------------------------------------------
+# elastic-capability honesty
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_capability_registry():
+    elastic = registry.with_capability("elastic")
+    assert set(elastic) == {"ellm"}
+
+
+@pytest.mark.parametrize("name", registry.with_capability("elastic"))
+def test_elastic_backend_deflates_after_sustained_pressure_drop(name):
+    """The ``elastic`` honesty contract: a backend claiming elasticity must
+    shrink its device reservation after sustained deflation — on its own,
+    with no ``release_cached()`` call. Inflate a weight-class working set,
+    free it, then keep a light churn going: the reservation must drop."""
+    a = make(name)
+    big = [a.malloc(64 * MB) for _ in range(4)]
+    inflated = a.reserved_bytes
+    assert inflated >= 256 * MB
+    for x in big:
+        a.free(x)
+    held = a.reserved_bytes
+    assert held == inflated  # caching still holds right after the frees
+    # sustained deflation: small-request churn, never touching the arena
+    for _ in range(64):
+        a.free(a.malloc(1 * MB))
+    deflated = a.reserved_bytes
+    assert deflated < held - 128 * MB, (
+        f"{name} claims elastic but held {deflated} of {held} reserved "
+        f"bytes through sustained deflation"
+    )
+    a.check_invariants()
+    # and the arena re-inflates cleanly after deflating
+    y = a.malloc(64 * MB)
+    assert a.stats.active_bytes >= 64 * MB
+    a.free(y)
+    a.check_invariants()
+
+
+@pytest.mark.parametrize("name", registry.with_capability("elastic"))
+def test_elastic_deflation_is_recovery_independent(name):
+    """Deflation policy must not depend on recovery mode: fault-free runs
+    with recovery compiled in deflate to the same reservation."""
+    plain = make(name)
+    forced = make(name, recovery=True)
+    for a in (plain, forced):
+        xs = [a.malloc(48 * MB) for _ in range(3)]
+        for x in xs:
+            a.free(x)
+        for _ in range(40):
+            a.free(a.malloc(2 * MB))
+    assert plain.reserved_bytes == forced.reserved_bytes
+    assert len(forced.event_log) == 0

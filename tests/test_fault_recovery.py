@@ -259,6 +259,44 @@ def test_engine_dump_load_roundtrip_is_lossless(tmp_path):
         {r.req_id: list(r.generated) for r in eng2.running.values()}
 
 
+def test_restore_resets_allocator_event_counters(tmp_path):
+    """Regression: ``memory_report`` counters must describe the engine's
+    *current life*. Before the fix, recovery/fault events logged by the
+    pre-kill life survived ``load_state``, so a post-restore report could
+    claim unrecovered faults that the restored engine never saw. Device-
+    lifetime counters (injected_faults) must survive; the allocator event
+    log must not."""
+    from repro.serve.killrecover import KillRecoverConfig, run_scenario
+
+    out = run_scenario(
+        KillRecoverConfig.for_backend("gmlake"), str(tmp_path / "gm")
+    )
+    assert out["restarts"] >= 1
+    rep = out["memory_report"]
+    counts = rep["recovery_events"]["counts"]
+    # every recovery event in the final report belongs to the final life:
+    # the ladder that survived to the end recovered everything it attempted
+    assert counts.get("recovered", 0) >= 1
+    assert counts.get("unrecovered", 0) == 0
+    # device-lifetime fault accounting is NOT reset by restore
+    assert rep["injected_faults"]["shrink"] == 1
+    assert rep["injected_faults"]["burst_armed"] == 1
+    # a full-rebuild restore clears the log outright (same-step restores
+    # are no-ops and deliberately do not)
+    eng = out["engine"]
+    log = eng.kv.arena.allocator.event_log
+    assert len(log) >= 1
+    state = eng.dump_state()
+    log.append("test_sentinel")
+    eng.load_state(state)  # same step, clean -> no-op, log untouched
+    assert log.counts.get("test_sentinel") == 1
+    eng.step()
+    eng.load_state(state)  # step moved on -> full rebuild -> fresh life
+    assert "test_sentinel" not in log.counts
+    # whatever the rebuild logged, it left nothing unrecovered
+    assert log.counts.get("unrecovered", 0) == 0
+
+
 def test_run_to_completion_returns_finished_requests():
     from repro.serve.killrecover import KillRecoverConfig, build_engine
 
