@@ -26,18 +26,22 @@ are deterministic functions of the seeded schedule, so drift beyond
 time only ever warns. A changed load config skips the tier rather than
 comparing incomparables.
 
-A third, **informational** tier compares named hotspot terms from
-``BENCH_profile.json`` files (see ``benchmarks/bench_profile.py``) when
-both ``--profile-baseline`` and ``--profile-candidate`` are readable:
-per-term cumulative-time ratios beyond ``--profile-threshold`` (default
-1.5x) and any drift in a term's *call count* (which is deterministic for
-the fixed-seed trace, so any change is a behaviour change) emit
-``::warning`` annotations. This tier never affects the exit code — term
-times are load-sensitive, so it exists to *name* the hot term that moved,
-not to block.
+A third, **hotspot** tier compares named terms from ``BENCH_profile.json``
+files (see ``benchmarks/bench_profile.py``) when both
+``--profile-baseline`` and ``--profile-candidate`` are readable. Since
+round 5 it is two-speed, mirroring the replay tier: per-term *call
+counts* and the recorded take/free ``core`` (``vec``/``object``) are
+deterministic for the fixed-seed trace — load cannot move them — so any
+drift **blocks** (subject to ``--annotate-only``); this is what catches a
+silent fallback from the vectorized core to the object path. Per-term
+cumulative-*time* ratios beyond ``--profile-threshold`` (default 1.5x)
+stay informational ``::warning`` annotations — term times are
+load-sensitive, so they exist to *name* the hot term that moved, not to
+block. A baseline predating the ``core`` field keeps the whole tier
+warn-only (no blocking on incomparable schemas).
 
 Exit codes: 0 = no regression (or --annotate-only), 1 = at least one
-trace x allocator pair regressed on either blocking tier, or the
+trace x allocator pair regressed on any blocking tier, or the
 candidate file itself is unreadable (a defect in this very run, never
 suppressed). A missing or unreadable *baseline* (corrupt artifact, schema
 drift in perf history) warns and exits 0 — an absent perf history must
@@ -102,13 +106,18 @@ _UNITS = {"model": "model-cost/event", "wall": "us/event"}
 
 
 def compare_profiles(baseline: dict, candidate: dict, threshold: float):
-    """Informational hotspot-term diff of two BENCH_profile.json payloads.
+    """Hotspot-term diff of two BENCH_profile.json payloads.
 
     Returns a list of (kind, term, old, new) findings where ``kind`` is
-    ``"time"`` (cumtime ratio past threshold) or ``"ncalls"`` (call-count
-    drift — deterministic, so any change is a behaviour change).
+    ``"time"`` (cumtime ratio past threshold — load-sensitive, never
+    blocks), ``"ncalls"`` (call-count drift — deterministic, so any change
+    is a behaviour change) or ``"core"`` (the recorded take/free core —
+    ``"vec"``/``"object"`` — changed; round 5's silent-fallback tripwire).
     """
     findings = []
+    base_core = baseline.get("core")
+    if base_core is not None and base_core != candidate.get("core"):
+        findings.append(("core", "core", base_core, candidate.get("core")))
     base_terms = baseline.get("terms", {})
     cand_terms = candidate.get("terms", {})
     for term, cand_t in cand_terms.items():
@@ -128,8 +137,19 @@ def compare_profiles(baseline: dict, candidate: dict, threshold: float):
     return findings
 
 
-def _profile_tier(profile_baseline, profile_candidate, threshold) -> None:
-    """Run the never-blocking hotspot-term tier; all problems are warnings."""
+def _profile_tier(profile_baseline, profile_candidate, threshold,
+                  annotate_only) -> int:
+    """Run the hotspot-term tier. Returns the number of blocking findings.
+
+    Call counts are deterministic for the fixed-seed trace — load cannot
+    move them — so call-count drift and a take/free core mismatch (the
+    ``core`` field: a silent fallback from the vectorized core to the
+    object path) **block** (subject to ``--annotate-only``). Term *times*
+    stay informational: they are load-sensitive, so they only ever warn.
+    A baseline without a ``core`` field predates the round-5 schema; the
+    whole tier stays warn-only against such a baseline rather than
+    blocking on incomparables.
+    """
     try:
         with open(profile_baseline) as f:
             base = json.load(f)
@@ -137,11 +157,24 @@ def _profile_tier(profile_baseline, profile_candidate, threshold) -> None:
             cand = json.load(f)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"::notice::hotspot-term diff skipped (unreadable profile): {e}")
-        return
+        return 0
     findings = compare_profiles(base, cand, threshold)
+    legacy_baseline = base.get("core") is None
+    can_block = not annotate_only and not legacy_baseline
+    if legacy_baseline:
+        print("::notice::profile baseline predates the 'core' field: "
+              "hotspot tier is warn-only for this run")
+    blocking = 0
     for kind, term, old, new in findings:
-        if kind == "ncalls":
-            print(f"::warning::hotspot term {term}: call count changed "
+        if kind == "core":
+            level = "error" if can_block else "warning"
+            blocking += can_block
+            print(f"::{level}::take/free core changed: {old} -> {new} "
+                  f"(silent fallback? vectorized core must stay engaged)")
+        elif kind == "ncalls":
+            level = "error" if can_block else "warning"
+            blocking += can_block
+            print(f"::{level}::hotspot term {term}: call count changed "
                   f"{old} -> {new} (deterministic: behaviour changed)")
         else:
             print(f"::warning::hotspot term {term}: {old:.3f}s -> {new:.3f}s "
@@ -150,7 +183,8 @@ def _profile_tier(profile_baseline, profile_candidate, threshold) -> None:
     if not findings:
         n = len(cand.get("terms", {}))
         print(f"hotspot terms: {n} named terms within {threshold:.2f}x of "
-              f"baseline, call counts unchanged")
+              f"baseline, call counts and core unchanged")
+    return blocking
 
 
 def compare_serving(baseline: dict, candidate: dict, model_threshold: float):
@@ -274,7 +308,7 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--profile-threshold", type=float, default=1.5,
         help="cumtime ratio that warn-annotates a named hotspot term "
-        "(informational tier: never affects the exit code)",
+        "(times never block; call-count/core drift in the same tier does)",
     )
     ap.add_argument(
         "--serving-baseline", default=None,
@@ -286,9 +320,11 @@ def main(argv=None) -> int:
     )
     args = ap.parse_args(argv)
 
+    profile_regressions = 0
     if args.profile_baseline and args.profile_candidate:
-        _profile_tier(
-            args.profile_baseline, args.profile_candidate, args.profile_threshold
+        profile_regressions = _profile_tier(
+            args.profile_baseline, args.profile_candidate,
+            args.profile_threshold, args.annotate_only,
         )
 
     serving_regressions = 0
@@ -304,7 +340,7 @@ def main(argv=None) -> int:
         _rows(baseline)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"::warning::replay perf diff skipped (no usable baseline): {e}")
-        return 1 if serving_regressions else 0
+        return 1 if (serving_regressions or profile_regressions) else 0
     try:  # an unreadable *candidate* is a real defect in this very run
         with open(args.candidate) as f:
             candidate = json.load(f)
@@ -331,7 +367,11 @@ def main(argv=None) -> int:
         print(f"replay perf: {len(candidate.get('rows', []))} rows within "
               f"thresholds (model {args.model_threshold:.0%}, "
               f"wall {args.threshold:.0%}) of baseline")
-    blocking = (regressions and not args.annotate_only) or serving_regressions
+    blocking = (
+        (regressions and not args.annotate_only)
+        or serving_regressions
+        or profile_regressions
+    )
     return 1 if blocking else 0
 
 

@@ -24,6 +24,11 @@ from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, Iterable, List, Optional
 
+try:  # the array fast paths need numpy; the scalar paths must not
+    import numpy as np
+except ImportError:  # pragma: no cover - exercised via subprocess guard test
+    np = None
+
 MB = 1024 * 1024
 GB = 1024 * MB
 
@@ -85,12 +90,23 @@ class ChunkRun:
     so consumers (extent packing, kernels, tests) treat them as lists.
     """
 
-    __slots__ = ("base", "start", "stop")
+    __slots__ = ("base", "start", "stop", "_arr")
 
     def __init__(self, base: List[int], start: int = 0, stop: Optional[int] = None):
         self.base = base
         self.start = start
         self.stop = len(base) if stop is None else stop
+        self._arr = None
+
+    def asarray(self):
+        """The view's ids as an int64 array (cached — the backing list is
+        immutable by the ChunkRun contract, so the array can never go
+        stale). Requires numpy; the scalar paths never call this."""
+        arr = self._arr
+        if arr is None:
+            arr = np.asarray(self.base[self.start : self.stop], dtype=np.int64)
+            self._arr = arr
+        return arr
 
     def __len__(self) -> int:
         return self.stop - self.start
@@ -124,8 +140,30 @@ class ChunkRun:
         return f"ChunkRun({list(self)!r})"
 
 
+def _pack_ids_array(a) -> List[Extent]:
+    """Vectorized run-length compression of an int64 id array: one compare
+    finds every run break, the Extents are read off the break positions.
+    Output is identical to the scalar scan — same runs, same order."""
+    n = len(a)
+    breaks = np.flatnonzero(a[1:] != a[:-1] + 1) + 1
+    starts = np.concatenate(([0], breaks))
+    stops = np.concatenate((breaks, [n]))
+    return [
+        Extent(int(a[s]), int(e - s))
+        for s, e in zip(starts.tolist(), stops.tolist())
+    ]
+
+
 def pack_extents(chunk_ids: Iterable[int]) -> List[Extent]:
     """Compress an ordered chunk-id list into maximal consecutive runs."""
+    if np is not None:
+        if isinstance(chunk_ids, ChunkRun):
+            a = chunk_ids.asarray()
+        else:
+            a = np.fromiter(chunk_ids, dtype=np.int64)
+        if len(a):
+            return _pack_ids_array(a)
+        return []
     out: List[Extent] = []
     for cid in chunk_ids:
         if out and cid == out[-1].stop:
@@ -140,8 +178,18 @@ def pack_extent_runs(chunk_runs: Iterable[Iterable[int]]) -> List[Extent]:
 
     Runs merge across boundaries exactly as if the ids were one flat list —
     this is the extent-table builder for stitched blocks, whose chunk ids
-    live in per-member lists.
+    live in per-member lists. With numpy, member ChunkRuns contribute their
+    cached id arrays and one concatenate feeds the vectorized packer.
     """
+    if np is not None:
+        parts = [
+            r.asarray() if isinstance(r, ChunkRun) else np.fromiter(r, dtype=np.int64)
+            for r in chunk_runs
+        ]
+        parts = [p for p in parts if len(p)]
+        if not parts:
+            return []
+        return _pack_ids_array(parts[0] if len(parts) == 1 else np.concatenate(parts))
     return pack_extents(itertools.chain.from_iterable(chunk_runs))
 
 
@@ -339,7 +387,14 @@ class VMMDevice:
                 f"cuMemCreate({n} chunks) with {len(self._free_chunks)} free "
                 f"chunks, {self.free_bytes} free bytes"
             )
-        chunks = [self._free_chunks.pop() for _ in range(n)]
+        if n:
+            # one slice + delete instead of n pops; a reversed tail is
+            # exactly the pop sequence, so recycling order is unchanged
+            chunks = self._free_chunks[-n:]
+            del self._free_chunks[-n:]
+            chunks.reverse()
+        else:
+            chunks = []
         self.ledger.charge("cuMemCreate", n * _per_call_cost("cuMemCreate", self.chunk_size), n)
         return chunks
 

@@ -85,12 +85,34 @@ Hot-path data structures (rounds 1–4 — see docs/ARCHITECTURE.md):
     bucket when the settled base was exhausted (round 4): consecutive
     same-size takes slice the tail of one persistent sorted list — the
     per-size cursor — instead of re-sorting a pending run each time.
+  * **Vectorized flat-array core** (round 5): every live pBlock/sBlock
+    carries a dense integer slot id into flat numpy arrays (``_VecCore``).
+    Reconciled activity counts live in one int64 array indexed by sBlock
+    slot; membership edges are cached per frozen segment as CSR-style
+    ``edge_ptr``/``edge_sid`` int32 arrays plus their aggregated
+    ``(ref_sids, ref_counts)`` unique form, so a segment that cycles
+    wholesale between pool and plans (the dominant serving pattern) never
+    re-walks its edges. The three refcount passes — the per-take
+    membership count, the reconcile apply/decrement pair, and the
+    destroy-sweep purge — become a handful of vectorized ops
+    (``np.concatenate``/``np.unique``/``np.bincount`` merges, fancy-index
+    scatter, boolean-mask compaction) instead of per-edge iteration,
+    aligning the take/free cycle with the compiled-event design of
+    ``replay_batched``. Destroyed slot ids are quarantined until the
+    dead-log compaction proves no cached array can still name them, which
+    is what makes slot recycling safe. ``vectorized=False`` (or a missing
+    numpy) falls back to the round-4 object path.
 
 All of this is mechanical sympathy only. Replay behaviour — S1–S5 state
 counts, peak active/reserved bytes, OOM points — is bit-identical to the
-seed implementation; ``tests/test_golden_equivalence.py`` pins it, and
+seed implementation; ``tests/test_golden_equivalence.py`` pins it,
 ``tests/test_plan_identity.py`` additionally pins digest equality with the
-round-4 fast paths force-disabled (``plan_identity=False``).
+round-4 fast paths force-disabled (``plan_identity=False``), and
+``tests/test_vectorized_core.py`` pins digest parity between the round-5
+array core and the object path (``vectorized=True/False``). The only
+documented *policy* knob is the StitchFree VA budget (``va_budget`` tiers):
+a non-default tier changes eviction decisions — a trade refereed by the
+load-independent modeled device cost, never by wall time.
 """
 
 from __future__ import annotations
@@ -110,6 +132,13 @@ from heapq import heapify, heappop, heappush
 from itertools import chain, repeat
 from operator import attrgetter, itemgetter
 from typing import Dict, List, Optional, Tuple
+
+try:  # the vectorized core needs numpy; the object path must not
+    import numpy as np
+except ImportError:  # pragma: no cover - exercised via subprocess guard test
+    np = None
+
+_EMPTY_I64 = None if np is None else np.zeros(0, dtype=np.int64)
 
 from .caching_allocator import Allocation, AllocatorOOM, CachingAllocator
 from .chunks import (
@@ -133,7 +162,9 @@ _ids = itertools.count()
 
 _get_sb_refs = attrgetter("sb_refs")
 _get_split_into = attrgetter("split_into")
+_get_slot = attrgetter("slot")
 _get_block = itemgetter(1)
+_get_active_members = attrgetter("active_members")
 
 
 class PBlock:
@@ -160,7 +191,7 @@ class PBlock:
 
     __slots__ = (
         "pid", "size", "chunks", "direct", "holder", "holder_gen",
-        "sb_refs", "split_into", "va", "_extents",
+        "sb_refs", "split_into", "va", "slot", "_extents",
     )
 
     def __init__(self, chunks, va: int = 0):
@@ -173,6 +204,7 @@ class PBlock:
         self.sb_refs: List["SBlock"] = []  # live sBlocks referencing this
         self.split_into: Optional[Tuple["PBlock", "PBlock"]] = None
         self.va = va
+        self.slot = -1  # dense id in the vectorized core (-1 = object mode)
         self._extents: Optional[List[Extent]] = None
 
     @property
@@ -209,15 +241,48 @@ class _Seg:
     re-activation bit-identical. ``owner`` is the sBlock whose
     held/pending free plan the segment currently belongs to, or ``None``
     while pooled.
+
+    Round 5 (vectorized core only) attaches flat membership arrays to the
+    frozen slice itself, so a segment that cycles wholesale between pool
+    and plans never re-walks its edges:
+
+      * ``ref_sids``/``ref_counts`` — the aggregated form the hot path
+        lives on: parallel int64 arrays mapping referencing sBlock slot ->
+        member count (ascending slot order), i.e. the array analogue of
+        the object path's refcount ``Counter``, sized by unique
+        referencing blocks rather than raw edges.
+      * ``edge_sid``/``edge_ptr`` — the raw pBlock→sBlock membership edges
+        in CSR form: ``edge_sid[edge_ptr[i]:edge_ptr[i+1]]`` are the sBlock
+        slot ids referencing member ``entries[i]``. Materialized on demand
+        (``_seg_edges`` — invariant checker, kernels, debugging); dropped
+        (``None``) whenever the edge set changes shape under the cache
+        (owner append, entry append). Cached arrays may name slots whose
+        block has since been destroyed — consumers mask against
+        ``sb_alive`` at the point of use (the invariant checker filters
+        before comparing), so no eager per-destroy purge ever walks the
+        caches.
+      * ``ref_extra`` — owner appends (one ``(slot, count)`` pair per
+        stitch that consumed the slice wholesale) buffered on a plain
+        list; ``_seg_refs`` folds them into the arrays at the next read.
+        Extending a numpy array per append costs ~40x a list append, and
+        stitches append far more often than takes read.
     """
 
-    __slots__ = ("size", "entries", "gen", "owner")
+    __slots__ = (
+        "size", "entries", "gen", "owner",
+        "edge_sid", "edge_ptr", "ref_sids", "ref_counts", "ref_extra",
+    )
 
     def __init__(self, size: int, entries: List[tuple]):
         self.size = size
         self.entries = entries
         self.gen = 0
         self.owner: Optional["SBlock"] = None
+        self.edge_sid = None
+        self.edge_ptr = None
+        self.ref_sids = None
+        self.ref_counts = None
+        self.ref_extra = None
 
     def __repr__(self):
         return f"_Seg(size={self.size >> 20}MB, n={len(self.entries)}, gen={self.gen})"
@@ -259,8 +324,8 @@ class SBlock:
 
     __slots__ = (
         "sid", "size", "n_members", "active_members", "gen", "held", "va",
-        "last_use", "pool_listed", "heap_lu", "_members", "_plan", "_refs",
-        "_refs_mark", "_chunks", "_extents",
+        "last_use", "pool_listed", "heap_lu", "slot", "_members", "_plan",
+        "_refs", "_refs_mark", "_chunks", "_extents",
     )
 
     def __init__(
@@ -292,6 +357,7 @@ class SBlock:
         self.pool_listed = False
         self.heap_lu: Optional[int] = None  # last_use of this block's live
         # LRU-heap entry, or None — dedups crossing pushes (round 4)
+        self.slot = -1  # dense id in the vectorized core (-1 = object mode)
         self._plan: Optional[List[Tuple[_Seg, int]]] = None
         self._refs: Optional[Dict["SBlock", int]] = None
         self._refs_mark = 0
@@ -374,6 +440,150 @@ def _count_entry_sids(counter: dict, entries: List[tuple]) -> None:
     _count_elements(
         counter, chain.from_iterable(map(_get_sb_refs, map(_get_block, entries)))
     )
+
+
+def _merge_id_parts(parts_s: List, parts_c: List):
+    """Sum parallel ``(ids, counts)`` array parts into one ascending
+    unique pair.
+
+    Sort-based: O(m log m) in the total part length m — and effectively
+    O(m), since each part arrives ascending and the stable sort is a
+    run-merge — **independent of the slot-table size**. (The obvious
+    ``bincount`` + ``nonzero`` merge is O(table) per call, which comes to
+    dominate the take tail once the table outgrows the per-take working
+    set — exactly what happens over a long serving replay.) Duplicate ids
+    within or across parts sum exactly; int64 throughout. Callers
+    guarantee at least one non-empty part.
+    """
+    s = np.concatenate(parts_s)
+    c = np.concatenate(parts_c)
+    order = s.argsort(kind="stable")
+    s = s[order]
+    c = c[order]
+    lead = np.empty(s.size, dtype=bool)
+    lead[0] = True
+    np.not_equal(s[1:], s[:-1], out=lead[1:])
+    idx = lead.nonzero()[0]
+    if idx.size == s.size:  # no duplicates anywhere: already reduced
+        return s, c
+    return s[idx], np.add.reduceat(c, idx)
+
+
+class _VecCore:
+    """Flat-array state for the vectorized take/free core (round 5).
+
+    Two dense integer id spaces, managed with free lists so arrays stay
+    O(live blocks), not O(creations):
+
+      * **sBlock slots** index three parallel structures: ``sb_active``
+        (int64 — the reconciled active-member count, the array analogue of
+        ``SBlock.active_members``, which goes *stale* in vectorized mode),
+        ``sb_alive`` (bool — live vs destroyed, the purge mask), and
+        ``sb_by_slot`` (slot -> SBlock, for resolving zero-crossings back
+        to objects).
+      * **pBlock slots** are a plain dense id space (no arrays index them
+        today); they exist so every block has a stable small-int identity
+        for edge arrays and invariant checks.
+
+    Slot recycling safety: cached segment/plan ref arrays may name a slot
+    long after its block was destroyed (they are purged lazily against
+    ``sb_alive``). A destroyed slot is therefore **quarantined** — not
+    returned to the free list — until ``compact_sb()``, which the
+    allocator calls only from ``_compact_dead_log`` after dropping every
+    cached array that could still name an old slot. Between compactions a
+    quarantined slot stays dead in ``sb_alive``, so aliveness masks purge
+    it from any cache; after a compaction no cache names it at all. That
+    two-phase release is what makes fancy-index scatter (which requires
+    unique indices) sound against recycled ids.
+
+    ``deaths`` is a monotone destroy counter used as a cache version stamp
+    (``_Seg.ref_mark`` / ``SBlock._refs_mark``): unlike the dead-block
+    *log* it is never reset, so stale marks are never ambiguous.
+    """
+
+    INITIAL_SLOTS = 64
+
+    __slots__ = (
+        "sb_active", "sb_alive", "sb_by_slot", "deaths",
+        "counters", "_sb_free", "_sb_quarantine", "_pb_free", "_pb_next",
+    )
+
+    def __init__(self, counters: Dict[str, int]):
+        n = self.INITIAL_SLOTS
+        self.sb_active = np.zeros(n, dtype=np.int64)
+        self.sb_alive = np.zeros(n, dtype=bool)
+        self.sb_by_slot: List[Optional["SBlock"]] = [None] * n
+        self.deaths = 0
+        self.counters = counters
+        self._sb_free = list(range(n - 1, -1, -1))  # pop() hands out ascending
+        self._sb_quarantine: List[int] = []
+        self._pb_free: List[int] = []
+        self._pb_next = 0
+
+    def acquire_sb(self, s: "SBlock") -> int:
+        free = self._sb_free
+        if not free:
+            self._grow()
+            free = self._sb_free
+        slot = free.pop()
+        self.sb_alive[slot] = True
+        self.sb_active[slot] = 0
+        self.sb_by_slot[slot] = s
+        return slot
+
+    def _grow(self) -> None:
+        n = len(self.sb_by_slot)
+        n2 = 2 * n
+        grown = np.zeros(n2, dtype=np.int64)
+        grown[:n] = self.sb_active
+        self.sb_active = grown
+        alive = np.zeros(n2, dtype=bool)
+        alive[:n] = self.sb_alive
+        self.sb_alive = alive
+        self.sb_by_slot.extend([None] * n)
+        self._sb_free.extend(range(n2 - 1, n - 1, -1))
+        self.counters["slot_grows"] += 1
+
+    def release_sb(self, slot: int) -> None:
+        """Destroy-time release: dead immediately, recyclable only after
+        the next ``compact_sb`` (see the quarantine rule above)."""
+        self.sb_alive[slot] = False
+        self.sb_by_slot[slot] = None
+        self._sb_quarantine.append(slot)
+        self.deaths += 1
+
+    def compact_sb(self) -> None:
+        q = self._sb_quarantine
+        if q:
+            self._sb_free.extend(q)
+            self._sb_quarantine = []
+            self.counters["dead_compactions"] += 1
+
+    def acquire_pb(self) -> int:
+        free = self._pb_free
+        if free:
+            return free.pop()
+        slot = self._pb_next
+        self._pb_next = slot + 1
+        return slot
+
+    def release_pb(self, slot: int) -> None:
+        self._pb_free.append(slot)
+
+
+#: ``GMLakeAllocator(va_budget=...)`` policy tiers: StitchFree VA budget as
+#: a multiple of device capacity. ``"paper"`` is the default 4x (paper
+#: §4.2.3); ``"tight"`` caps stitched VA at 1x capacity (lowest peak VA,
+#: most destroy/remap churn); ``"speed"`` disables StitchFree entirely
+#: (None -> unbounded: fewest device calls, highest peak VA). Tiers other
+#: than the default change *eviction policy* — behaviour is NOT
+#: bit-identical — so their trade-off is refereed by the load-independent
+#: modeled device cost (``model_cost_per_event``), never by wall time.
+VA_BUDGET_TIERS: Dict[str, Optional[float]] = {
+    "paper": 4.0,
+    "tight": 1.0,
+    "speed": None,
+}
 
 
 class _IndexedPool:
@@ -549,19 +759,29 @@ class _InactiveSBlocks(_IndexedPool):
     ``exact`` still returns the lowest-sid *truly inactive* block of the
     size, exactly what the eager pool would have held. ``sweep()`` restores
     the eager representation for iteration/invariant checks.
+
+    The staleness filter reads the reconciled active-member count through
+    ``active_of`` (round 5): the object path reads
+    ``SBlock.active_members``, the vectorized core reads its
+    ``sb_active`` slot — the attribute goes stale in that mode.
     """
 
-    __slots__ = ()
+    __slots__ = ("_active_of",)
+
+    def __init__(self, active_of=_get_active_members):
+        super().__init__()
+        self._active_of = active_of
 
     def exact(self, size: int):
         if size not in self._buckets:
             return None
         bucket = self._settled(size)
+        active_of = self._active_of
         i = 0
         n = len(bucket)
         while i < n:
             s = bucket[i][1]
-            if s.active_members == 0:
+            if active_of(s) == 0:
                 break
             s.pool_listed = False  # stale: delist lazily
             i += 1
@@ -578,12 +798,13 @@ class _InactiveSBlocks(_IndexedPool):
     def sweep(self) -> None:
         """Drop every stale entry: the pool then holds exactly the inactive
         set, as the eager scheme would (iteration/invariant paths only)."""
+        active_of = self._active_of
         for size in list(self._sizes):
             bucket = self._settled(size)
             kept = []
             for e in bucket:
                 s = e[1]
-                if s.active_members == 0:
+                if active_of(s) == 0:
                     kept.append(e)
                 else:
                     s.pool_listed = False
@@ -681,6 +902,18 @@ class GMLakeAllocator:
     segment Counters, wholesale segment reuse, cached-plan re-activation):
     every consumption re-counts membership from the sid arrays. Behaviour
     is bit-identical either way — ``tests/test_plan_identity.py`` pins it.
+
+    ``vectorized`` selects the round-5 flat-array refcount core (default:
+    on when numpy is importable; requesting it without numpy falls back to
+    the object path and counts a ``numpy_fallback``). Behaviour is
+    bit-identical either way — ``tests/test_vectorized_core.py`` pins it.
+
+    ``va_budget`` is the documented StitchFree policy knob: a tier name
+    from ``VA_BUDGET_TIERS`` (``"paper"``/``"tight"``/``"speed"``), a float
+    multiple of device capacity, or an absolute byte count (int). The
+    legacy ``sblock_va_budget`` (absolute bytes) wins when both are given.
+    Non-default tiers trade peak stitched VA (``peak_sblock_va``) against
+    modeled device cost — see ``VA_BUDGET_TIERS``.
     """
 
     name = "gmlake"
@@ -708,13 +941,16 @@ class GMLakeAllocator:
         plan_identity: bool = True,
         recovery: Optional[bool] = None,
         deferred_unmap: Optional[bool] = None,
+        vectorized: Optional[bool] = None,
+        va_budget=None,
     ):
         self.device = device
         self.frag_limit = frag_limit
-        # paper §4.2.3: VA for stitched blocks is capped; LRU StitchFree past it
-        self.sblock_va_budget = (
-            sblock_va_budget if sblock_va_budget is not None else 4 * device.capacity_bytes
-        )
+        # paper §4.2.3: VA for stitched blocks is capped; LRU StitchFree past
+        # it. Resolution order: legacy absolute bytes, then the policy knob
+        # (tier name / capacity multiple / absolute bytes), then the default
+        # "paper" tier (4x capacity).
+        self.sblock_va_budget = self._resolve_va_budget(sblock_va_budget, va_budget)
         self.plan_identity = plan_identity
         self.stats = AllocatorStats(record_timeline=record_timeline)
         self.state_counts: Dict[str, int] = {f"S{i}": 0 for i in range(1, 6)}
@@ -726,8 +962,45 @@ class GMLakeAllocator:
         }
         self.stats.counters = self.hotspots
 
+        #: round-5 vectorized-core observability (diagnostics only; never
+        #: digest material). Surfaced through ``ReplayResult.vec_counters``
+        #: and ``ServeEngine.memory_report()`` exactly like
+        #: ``elastic_counters`` / recovery summaries — no side channels.
+        self.vec_counters: Dict[str, int] = {
+            "enabled": 0,
+            "numpy_fallback": 0,  # vectorized requested but numpy missing
+            "seg_cache_builds": 0,  # edge arrays built from object lists
+            "seg_cache_appends": 0,  # owner-append updates of cached arrays
+            "ref_purges": 0,  # aliveness-mask compactions of cached arrays
+            "slot_grows": 0,  # slot-table doublings
+            "dead_compactions": 0,  # quarantined-slot recycles
+        }
+        if vectorized is None:
+            self.vectorized = np is not None
+        else:
+            self.vectorized = bool(vectorized) and np is not None
+            if vectorized and np is None:
+                self.vec_counters["numpy_fallback"] = 1
+        if self.vectorized:
+            self.vec_counters["enabled"] = 1
+            self._vec_core = _VecCore(self.vec_counters)
+            # mode binding: the refcount passes are bound per instance so
+            # the hot path never re-tests the mode (same pattern as
+            # AllocatorStats.__post_init__'s timeline-free fast variants)
+            self._apply_activation = self._apply_activation_vec
+            self._refs_decrement = self._refs_decrement_vec
+            self._purge_refs = self._purge_refs_vec
+            self._activate_p = self._activate_p_vec
+            self._deactivate_p = self._deactivate_p_vec
+            self._active_of = self._active_of_vec
+        else:
+            self._vec_core = None
+        self.stats.vec_counters = self.vec_counters
+        #: high-water mark of stitched VA (the va_budget trade-off metric)
+        self.peak_sblock_va = 0
+
         self._inactive_p = _PartitionedPool(frag_limit)
-        self._inactive_s = _InactiveSBlocks()
+        self._inactive_s = _InactiveSBlocks(self._active_of)
         self._pblocks: Dict[int, PBlock] = {}  # registry of all live pBlocks
         self._sblocks: Dict[int, SBlock] = {}  # registry of all live sBlocks
         # StitchFree LRU: lazy-invalidation min-heap of (last_use, sid).
@@ -766,6 +1039,33 @@ class GMLakeAllocator:
             device, recovery=self._recovery_on, event_log=self.event_log
         )
 
+    def _resolve_va_budget(self, sblock_va_budget, va_budget):
+        """Resolve the StitchFree VA budget from the two knobs.
+
+        ``sblock_va_budget`` (legacy, absolute bytes) wins when given.
+        ``va_budget`` accepts a tier name from ``VA_BUDGET_TIERS``, a float
+        (multiple of device capacity) or an int (absolute bytes); the
+        ``"speed"`` tier maps to +inf (StitchFree never fires).
+        """
+        if sblock_va_budget is not None:
+            return sblock_va_budget
+        capacity = self.device.capacity_bytes
+        if va_budget is None:
+            return 4 * capacity
+        if isinstance(va_budget, str):
+            try:
+                mult = VA_BUDGET_TIERS[va_budget]
+            except KeyError:
+                raise ValueError(
+                    f"unknown va_budget tier {va_budget!r}; "
+                    f"expected one of {sorted(VA_BUDGET_TIERS)}, "
+                    "a float capacity multiple, or absolute bytes"
+                ) from None
+            return float("inf") if mult is None else int(mult * capacity)
+        if isinstance(va_budget, float):
+            return int(va_budget * capacity)
+        return int(va_budget)
+
     # ------------------------------------------------------------------
     # accounting
     # ------------------------------------------------------------------
@@ -773,6 +1073,25 @@ class GMLakeAllocator:
     def reserved_bytes(self) -> int:
         """Physical bytes held (VMS chunks + small-pool segments). O(1)."""
         return self._chunk_bytes + self._small.reserved_bytes
+
+    def _note_sblock_va(self, delta: int) -> None:
+        """Charge stitched-VA growth and track the high-water mark."""
+        va = self._sblock_va_bytes + delta
+        self._sblock_va_bytes = va
+        if va > self.peak_sblock_va:
+            self.peak_sblock_va = va
+
+    # ------------------------------------------------------------------
+    # activity accessors (mode-bound, round 5)
+    # ------------------------------------------------------------------
+    def _active_of(self, s: SBlock) -> int:
+        """Reconciled active-member count (object path: the attribute)."""
+        return s.active_members
+
+    def _active_of_vec(self, s: SBlock) -> int:
+        """Reconciled active-member count (vectorized: the slot array —
+        ``active_members`` is stale in this mode)."""
+        return int(self._vec_core.sb_active[s.slot])
 
     # ------------------------------------------------------------------
     # activity transitions
@@ -812,6 +1131,40 @@ class GMLakeAllocator:
                     s.pool_listed = True
                     inactive_s.add(s)
 
+    def _activate_p_vec(self, p: PBlock) -> None:
+        """``_activate_p`` against the slot array (vectorized core).
+
+        ``sb_refs`` stays a tiny object list (~10 entries) in both modes —
+        the single-block transitions never had an array-shaped cost; only
+        the batched passes did.
+        """
+        assert not p.active
+        self._inactive_p.remove(p)
+        p.direct = True
+        act = self._vec_core.sb_active
+        for s in p.sb_refs:
+            act[s.slot] += 1
+
+    def _deactivate_p_vec(self, p: PBlock) -> None:
+        assert p.direct
+        p.direct = False
+        self._inactive_p.add(p)
+        heap = self._lru_heap
+        inactive_s = self._inactive_s
+        act = self._vec_core.sb_active
+        for s in p.sb_refs:
+            slot = s.slot
+            m = int(act[slot]) - 1
+            act[slot] = m
+            assert m >= 0
+            if m == 0:
+                if s.heap_lu != s.last_use:
+                    s.heap_lu = s.last_use
+                    heappush(heap, (s.last_use, s.sid))
+                if not s.pool_listed:
+                    s.pool_listed = True
+                    inactive_s.add(s)
+
     def _purge_refs(self, s: SBlock) -> None:
         """Drop destroyed sBlocks from a cached plan's refcount Counter.
 
@@ -829,6 +1182,152 @@ class GMLakeAllocator:
             for r in dead[mark:]:
                 refs.pop(r, None)
             s._refs_mark = n
+
+    def _purge_refs_vec(self, s: SBlock) -> None:
+        """Vectorized ``_purge_refs``: one aliveness mask over the cached
+        ``(ref_sids, ref_counts)`` plan arrays instead of a log replay —
+        destroyed slots stay dead in ``sb_alive`` until every cache has had
+        a chance to drop them (the quarantine rule), so masking is exact at
+        any time. ``_refs_mark`` holds the monotone ``deaths`` stamp."""
+        core = self._vec_core
+        deaths = core.deaths
+        if s._refs_mark != deaths:
+            sids, counts = s._refs
+            if sids.size:
+                keep = core.sb_alive[sids]
+                if not keep.all():
+                    s._refs = (sids[keep], counts[keep])
+                    core.counters["ref_purges"] += 1
+            s._refs_mark = deaths
+
+    # ------------------------------------------------------------------
+    # vectorized membership counting (round 5)
+    # ------------------------------------------------------------------
+    def _seg_refs(self, seg: _Seg):
+        """The segment's aggregated membership refcounts as parallel arrays
+        ``(ref_sids, ref_counts)`` — slot ids of referencing sBlocks and how
+        many of this slice's members each references.
+
+        Checker/introspection surface — the hot take path counts raw
+        edges directly (see ``_count_segs_refs`` for why). Cache hit:
+        fold any buffered owner appends, then reuse verbatim. The
+        returned arrays may still name slots destroyed since the cache
+        was built — destroys never walk the caches; consumers mask
+        against ``sb_alive`` at the point of use (the invariant checker
+        filters before comparing). Miss: one C-level counting pass over
+        the members' ``sb_refs`` chains (the same ``_count_elements``
+        machinery as the object path) feeds two small ``fromiter`` calls
+        — the arrays built are sized by *unique referencing blocks*,
+        never by raw edges, and a fresh build is alive-only by
+        construction (``_destroy_sblock`` scrubs ``sb_refs`` eagerly).
+        """
+        sids = seg.ref_sids
+        if sids is not None:
+            extra = seg.ref_extra
+            if extra is not None:
+                # fold buffered owner appends (same end-of-array order an
+                # eager per-append extension would have produced)
+                n = sids.size
+                k = len(extra)
+                folded_s = np.empty(n + k, dtype=np.int64)
+                folded_c = np.empty(n + k, dtype=np.int64)
+                folded_s[:n] = sids
+                folded_c[:n] = seg.ref_counts
+                for i, (sl, c) in enumerate(extra, n):
+                    folded_s[i] = sl
+                    folded_c[i] = c
+                sids = folded_s
+                seg.ref_sids = folded_s
+                seg.ref_counts = folded_c
+                seg.ref_extra = None
+            return sids, seg.ref_counts
+        d: Dict[SBlock, int] = {}
+        _count_elements(
+            d,
+            chain.from_iterable(e[1].sb_refs for e in seg.entries),
+        )
+        n = len(d)
+        if n:
+            sids = np.fromiter(map(_get_slot, d.keys()), np.int64, count=n)
+            counts = np.fromiter(d.values(), np.int64, count=n)
+            # slot order (ascending) — the same order the merge output has
+            # (nonzero of a slot-indexed accumulator), so downstream
+            # ordering never depends on which path produced the arrays
+            order = np.argsort(sids)
+            sids = sids[order]
+            counts = counts[order]
+        else:
+            sids = _EMPTY_I64
+            counts = _EMPTY_I64
+        seg.ref_sids = sids
+        seg.ref_counts = counts
+        self._vec_core.counters["seg_cache_builds"] += 1
+        return sids, counts
+
+    def _seg_edges(self, seg: _Seg):
+        """The slice's raw pBlock→sBlock membership edges in CSR form
+        (``edge_sid``/``edge_ptr``) — materialized on demand and cached.
+
+        The hot path only ever needs the aggregated ``(ref_sids,
+        ref_counts)`` form, so the per-edge arrays are built lazily (the
+        invariant checker cross-validates them against the aggregate;
+        kernels/debugging can walk them). Every cache-invalidation site
+        drops both forms together, but destroys do NOT walk caches — a
+        cached CSR may predate ``sb_refs`` scrubbing. Callers needing an
+        authoritative edge list must drop ``edge_sid``/``edge_ptr`` first
+        (the invariant checker does).
+        """
+        es = seg.edge_sid
+        if es is not None:
+            return es, seg.edge_ptr
+        edges: List[SBlock] = []
+        ptr = [0]
+        pa = ptr.append
+        for e in seg.entries:
+            edges += e[1].sb_refs
+            pa(len(edges))
+        es = np.fromiter(map(_get_slot, edges), np.int32, count=len(edges))
+        seg.edge_sid = es
+        seg.edge_ptr = np.asarray(ptr, dtype=np.int32)
+        return es, seg.edge_ptr
+
+    def _count_segs_refs(self, segs: List[_Seg]):
+        """The take tail's membership count, vectorized core: ONE C-level
+        counting pass over the candidate set's raw edges, converted once
+        into the ``(sids, counts)`` array pair that drives every
+        downstream array pass (activation scatter, reconcile decrement,
+        aliveness masking).
+
+        Deliberately the same counting *kernel* as the object path
+        (``_count_take_refs``). A per-segment cached-aggregate merge was
+        built, measured and rejected for this spot: at serving scale a
+        take's candidate set is ~10 slices / ~1k edges compressing to
+        ~125 unique referencing blocks, and one ``_count_elements`` walk
+        at tens of ns/edge beats any numpy merge whose per-op constants
+        are ~1-2 µs — the measured crossover sits near ~5k edges per
+        take, which the serving replay never approaches (BENCHMARKS.md,
+        round 5). The arrays win where state is long-lived and batched —
+        the refcount pair, plan purges, the destroy sweep — so the count
+        pass feeds them without itself merging arrays. Fresh counts are
+        alive-only by construction (``_destroy_sblock`` scrubs
+        ``sb_refs`` eagerly), so no aliveness mask is needed; the output
+        is deliberately unsorted (no consumer is order-sensitive). The
+        per-segment aggregate/CSR caches remain the invariant checker's
+        and introspection's domain (``_seg_refs`` / ``_seg_edges``).
+        """
+        edges: List[SBlock] = []
+        for seg in segs:
+            for e in seg.entries:
+                edges += e[1].sb_refs
+        d: Dict[SBlock, int] = {}
+        _count_elements(d, edges)
+        n = len(d)
+        if not n:
+            return (_EMPTY_I64, _EMPTY_I64)
+        return (
+            np.fromiter(map(_get_slot, d.keys()), np.int64, count=n),
+            np.fromiter(d.values(), np.int64, count=n),
+        )
 
     def _hold_sblock(self, s: SBlock) -> None:
         """Hand out an existing inactive sBlock (S1).
@@ -885,13 +1384,25 @@ class GMLakeAllocator:
             else:
                 entries.append((p.pid, p))
         new_plan: List[Tuple[_Seg, int]] = []
-        refs: Dict[SBlock, int] = {}
-        for size, entries in by_size.items():
-            pools[size >= limit].remove_batch(size, {e[0] for e in entries})
-            _count_entry_sids(refs, entries)
-            seg = _Seg(size, entries)
-            seg.owner = s
-            new_plan.append((seg, 0))
+        if self.vectorized:
+            segs: List[_Seg] = []
+            for size, entries in by_size.items():
+                pools[size >= limit].remove_batch(size, {e[0] for e in entries})
+                seg = _Seg(size, entries)
+                seg.owner = s
+                new_plan.append((seg, 0))
+                segs.append(seg)
+            # one C counting pass over the fresh segments, converted once
+            # into the array pair the vectorized refcount passes consume
+            refs = self._count_segs_refs(segs)
+        else:
+            refs: Dict[SBlock, int] = {}
+            for size, entries in by_size.items():
+                pools[size >= limit].remove_batch(size, {e[0] for e in entries})
+                _count_entry_sids(refs, entries)
+                seg = _Seg(size, entries)
+                seg.owner = s
+                new_plan.append((seg, 0))
         self._apply_activation(refs)
         s._plan = new_plan
         s._refs = refs
@@ -906,6 +1417,49 @@ class GMLakeAllocator:
         """
         for s, d in refs.items():
             s.active_members += d
+
+    def _apply_activation_vec(self, refs) -> None:
+        """Vectorized ``_apply_activation``: ``refs`` is the plan's
+        ``(sids, counts)`` array pair; slot ids are unique within a plan,
+        so one fancy-index scatter-add applies the whole batch."""
+        sids, counts = refs
+        if sids.size:
+            self._vec_core.sb_active[sids] += counts
+
+    def _refs_decrement(self, refs, zeros_append) -> None:
+        """Apply a freed plan's refcount decrements (object path).
+
+        Collects blocks whose reconciled count crossed zero into ``zeros``
+        via ``zeros_append`` — the caller does the heap/pool listing, which
+        is shared between both modes. Counts only shrink during a reconcile
+        batch, so each block crosses zero at most once across the batch and
+        the collected order equals the crossing order.
+        """
+        for r, d in refs.items():
+            m = r.active_members - d
+            r.active_members = m
+            assert m >= 0
+            if m == 0:
+                zeros_append(r)
+
+    def _refs_decrement_vec(self, refs, zeros_append) -> None:
+        """Vectorized ``_refs_decrement``: one gather, one subtract, one
+        scatter over the slot array; only zero-crossings come back to the
+        object world (via ``sb_by_slot``) for LRU/pool listing. The object
+        path's per-entry non-negativity assert is covered globally by the
+        invariant checker ("slot activity drifted"), so the hot path
+        carries no reduction."""
+        sids, counts = refs
+        if not sids.size:
+            return
+        act = self._vec_core.sb_active
+        rem = act[sids] - counts
+        act[sids] = rem
+        zero = (rem == 0).nonzero()[0]
+        if zero.size:
+            by_slot = self._vec_core.sb_by_slot
+            for slot in sids[zero].tolist():
+                zeros_append(by_slot[slot])
 
     def _reconcile(self) -> None:
         """Apply all deferred sBlock frees in one batched pass.
@@ -933,7 +1487,16 @@ class GMLakeAllocator:
         limit = self.frag_limit
         heap = self._lru_heap
         inactive_s_add = self._inactive_s.add
-        dead_n = len(self._dead_refs)
+        # the cache-freshness stamp written to each reconciled plan: the
+        # dead-log position (object path) or the monotone destroy counter
+        # (vectorized path — see _VecCore.deaths)
+        if self.vectorized:
+            dead_mark = self._vec_core.deaths
+        else:
+            dead_mark = len(self._dead_refs)
+        refs_decrement = self._refs_decrement
+        zeros: List[SBlock] = []
+        zeros_append = zeros.append
         for s in pending:
             for seg, _g in s._plan:
                 seg.owner = None
@@ -950,22 +1513,19 @@ class GMLakeAllocator:
                 n = len(seg.entries)
                 pool._count += n
                 pool.bytes += size * n
-            s._refs_mark = dead_n  # refs cached for plan-identity re-holds
-            # decrement from the plan's frozen Counter (keys are the
-            # referencing sBlocks themselves): counts only shrink, so
-            # zero-crossings are batch-order independent and land on
-            # whichever decrement is last
-            for r, d in s._refs.items():
-                m = r.active_members - d
-                r.active_members = m
-                assert m >= 0
-                if m == 0:
-                    if r.heap_lu != r.last_use:
-                        r.heap_lu = r.last_use
-                        heappush(heap, (r.last_use, r.sid))
-                    if not r.pool_listed:
-                        r.pool_listed = True
-                        inactive_s_add(r)
+            s._refs_mark = dead_mark  # refs cached for plan-identity re-holds
+            # decrement from the plan's frozen refcounts (Counter keyed by
+            # the referencing sBlocks themselves, or the slot-array pair):
+            # counts only shrink, so zero-crossings are batch-order
+            # independent and land on whichever decrement is last
+            refs_decrement(s._refs, zeros_append)
+        for r in zeros:
+            if r.heap_lu != r.last_use:
+                r.heap_lu = r.last_use
+                heappush(heap, (r.last_use, r.sid))
+            if not r.pool_listed:
+                r.pool_listed = True
+                inactive_s_add(r)
         # lazy invalidation leaves stale entries behind; when they outnumber
         # the live ones, rebuild from the inactive set (one valid entry per
         # inactive sBlock) so heap memory stays O(inactive), not O(frees)
@@ -982,6 +1542,8 @@ class GMLakeAllocator:
         self._pblocks[p.pid] = p
         self._chunk_bytes += p.size
         p.direct = True  # handed out or immediately stitched by the caller
+        if self.vectorized:
+            p.slot = self._vec_core.acquire_pb()
         return p
 
     def _split_parts(self, p: PBlock, first_size: int) -> Tuple[PBlock, PBlock]:
@@ -1005,6 +1567,11 @@ class GMLakeAllocator:
         b = PBlock(chunks[k:])
         self._pblocks[a.pid] = a
         self._pblocks[b.pid] = b
+        if self.vectorized:
+            core = self._vec_core
+            core.release_pb(p.slot)  # pb slots have no caches: recycle now
+            a.slot = core.acquire_pb()
+            b.slot = core.acquire_pb()
         # two new VA reservations + remap (charged to the device model)
         self.device.vmm_split_remap(k, len(b.chunks))
         refs = p.sb_refs
@@ -1047,8 +1614,14 @@ class GMLakeAllocator:
             active_members=active_members,
         )
         self._sblocks[s.sid] = s
-        self._sblock_va_bytes += s.size
-        if s.active_members == 0:
+        if self.vectorized:
+            # the constructor already appended s to each member's sb_refs;
+            # mirror the freshly computed count into the slot array (the
+            # attribute goes stale from here on)
+            s.slot = self._vec_core.acquire_sb(s)
+            self._vec_core.sb_active[s.slot] = s.active_members
+        self._note_sblock_va(s.size)
+        if self._active_of(s) == 0:
             s.pool_listed = True
             s.heap_lu = s.last_use
             self._inactive_s.add(s)
@@ -1095,23 +1668,61 @@ class GMLakeAllocator:
         s.last_use = self._tick
         s.pool_listed = False
         s.heap_lu = None
-        s._refs = refs
         s._refs_mark = 0
         s._chunks = None
         s._extents = None
         plan_list: List[Tuple[_Seg, int]] = []
-        for seg in plan.values():
-            seg.owner = s
-            plan_list.append((seg, seg.gen))
+        if self.vectorized:
+            core = self._vec_core
+            slot = core.acquire_sb(s)
+            s.slot = slot
+            core.sb_active[slot] = n_members
+            appends = 0
+            for seg in plan.values():
+                seg.owner = s
+                plan_list.append((seg, seg.gen))
+                if seg.ref_sids is not None:
+                    # owner append: every member of this slice gains one
+                    # edge to the new block — the aggregate extends by one
+                    # (slot, len(entries)) entry (the slot is fresh, so
+                    # uniqueness holds). Array extension per append is the
+                    # hottest numpy cost in the whole cycle, so the entry
+                    # goes on a plain list folded into the arrays at the
+                    # next read (``_seg_refs``); the raw CSR would need
+                    # per-member interleaving, so it is dropped instead
+                    extra = seg.ref_extra
+                    if extra is None:
+                        seg.ref_extra = [(slot, len(seg.entries))]
+                    else:
+                        extra.append((slot, len(seg.entries)))
+                    seg.edge_sid = None
+                    seg.edge_ptr = None
+                    appends += 1
+            if appends:
+                core.counters["seg_cache_appends"] += appends
+            sids, counts = refs
+            n = sids.size
+            rs = np.empty(n + 1, dtype=np.int64)
+            rc = np.empty(n + 1, dtype=np.int64)
+            rs[:n] = sids
+            rc[:n] = counts
+            rs[n] = slot
+            rc[n] = n_members
+            s._refs = (rs, rc)
+        else:
+            for seg in plan.values():
+                seg.owner = s
+                plan_list.append((seg, seg.gen))
+            refs[s] = n_members
+            s._refs = refs
         for p in members:
             p.holder = s
             p.holder_gen = gen
             p.sb_refs.append(s)
         s._plan = plan_list
         s._members = members
-        refs[s] = n_members
         self._sblocks[sid] = s
-        self._sblock_va_bytes += total_size
+        self._note_sblock_va(total_size)
         self._maybe_stitch_free()
         return s
 
@@ -1125,6 +1736,7 @@ class GMLakeAllocator:
             return
         heap = self._lru_heap
         sblocks = self._sblocks
+        active_of = self._active_of
         while self._sblock_va_bytes > self.sblock_va_budget and heap:
             last_use, sid = heappop(heap)
             s = sblocks.get(sid)
@@ -1132,7 +1744,7 @@ class GMLakeAllocator:
                 continue  # stale entry: block destroyed
             if s.heap_lu == last_use:
                 s.heap_lu = None  # its live entry just left the heap
-            if s.active_members > 0 or s.last_use != last_use:
+            if active_of(s) > 0 or s.last_use != last_use:
                 continue  # stale entry: re-activated or refreshed
             self._destroy_sblock(s)
 
@@ -1162,6 +1774,11 @@ class GMLakeAllocator:
             map(list.remove, map(_get_sb_refs, members), repeat(s)),
             maxlen=0,
         )
+        if self.vectorized:
+            # dead in sb_alive immediately (purge masks see it); the slot
+            # itself is quarantined until the next dead-log compaction, when
+            # no cached array can name it anymore
+            self._vec_core.release_sb(s.slot)
         self._dead_refs.append(s)
         if len(self._dead_refs) > self.DEAD_LOG_LIMIT:
             self._compact_dead_log()
@@ -1197,11 +1814,37 @@ class GMLakeAllocator:
         once — which rebuilds the cache.
         """
         pending = self._pending_frees
+        if self.vectorized:
+            # Quarantined slots are about to be recycled, so every cached
+            # segment array that could still name one must go: pooled
+            # frozen segments, plus the plan segments of held/pending
+            # blocks (their plan-level refs are safe — a held plan's
+            # referencing blocks are active, hence undestroyable — but a
+            # seg cache may predate the hold). Dropping a cache only costs
+            # a rebuild on its next use.
+            for pool in (self._inactive_p.main, self._inactive_p.sub):
+                for segs in pool._segs.values():
+                    for seg in segs:
+                        seg.ref_sids = None
+                        seg.ref_counts = None
+                        seg.edge_sid = None
+                        seg.edge_ptr = None
+                        seg.ref_extra = None
+            for s in self._sblocks.values():
+                if s._plan is not None:
+                    for seg, _g in s._plan:
+                        seg.ref_sids = None
+                        seg.ref_counts = None
+                        seg.edge_sid = None
+                        seg.edge_ptr = None
+                        seg.ref_extra = None
         for s in self._sblocks.values():
             if s._plan is not None and not s.held and s not in pending:
                 s._plan = None
                 s._refs = None
         self._dead_refs.clear()
+        if self.vectorized:
+            self._vec_core.compact_sb()
 
     def _compact_lru_heap(self) -> None:
         self._inactive_s.sweep()  # iteration must see only truly-inactive
@@ -1275,6 +1918,7 @@ class GMLakeAllocator:
         pools = (pool_main, self._inactive_p.sub) if include_sub else (pool_main,)
         plan: Dict[int, _Seg] = {}
         hotspots = self.hotspots
+        vec = self.vectorized
         total = 0
         split_last: Optional[PBlock] = None
         keep = 0
@@ -1381,23 +2025,60 @@ class GMLakeAllocator:
                 plan[a.size] = _Seg(a.size, [entry])
             else:
                 seg.entries.append(entry)
+                # the slice gained a member the caches never saw (the half
+                # inherits its parent's membership). The per-edge CSR goes
+                # stale either way, but the aggregate is patched in place
+                # when present — each inherited referencing block counts
+                # the half exactly once — instead of forcing a full
+                # rebuild of a slice this very take just merged.
+                seg.edge_sid = None
+                seg.edge_ptr = None
+                sids = seg.ref_sids
+                if sids is None:
+                    seg.ref_counts = None
+                    seg.ref_extra = None
+                elif a.sb_refs:
+                    nh = len(a.sb_refs)
+                    half_s = np.fromiter(
+                        map(_get_slot, a.sb_refs), np.int64, count=nh
+                    )
+                    seg.ref_sids, seg.ref_counts = _merge_id_parts(
+                        [sids, half_s],
+                        [seg.ref_counts, np.ones(nh, dtype=np.int64)],
+                    )
             total += keep
         # flatten the candidate set once — the take, the refcount pass and
-        # the stitch all share this list — then ONE aggregated C-level
-        # count of the flat membership arrays, applied as one batch. The
-        # counts become the new block's frozen free-plan refs.
+        # the stitch all share this list. Both cores count the flat
+        # membership edges in ONE aggregated C-level pass (the measured
+        # optimum at serving scale — see _count_segs_refs); the vectorized
+        # core then carries the result as a (sids, counts) array pair. The
+        # counts become the new block's frozen free-plan refs, applied as
+        # one batch.
         members: List[PBlock] = []
-        edges: List[SBlock] = []
         ma = members.append
         for seg in plan.values():
             for e in seg.entries:
-                p = e[1]
-                ma(p)
-                edges += p.sb_refs
-        refs: Dict[SBlock, int] = {}
-        _count_elements(refs, edges)
+                ma(e[1])
+        if vec:
+            refs = self._count_segs_refs(list(plan.values()))
+        else:
+            refs = self._count_take_refs(plan.values())
         self._apply_activation(refs)
         return plan, total, refs, members
+
+    def _count_take_refs(self, plan_segs) -> Dict["SBlock", int]:
+        """The take tail's membership count pass, object path: flatten the
+        candidate set's pBlock→sBlock edges once and count them in ONE
+        C-level pass. Isolated as its own frame so the profile harness
+        can compare it like-for-like against the vectorized merge
+        (``_count_segs_refs`` + ``_merge_recount_cache``)."""
+        edges: List[SBlock] = []
+        for seg in plan_segs:
+            for e in seg.entries:
+                edges += e[1].sb_refs
+        refs: Dict[SBlock, int] = {}
+        _count_elements(refs, edges)
+        return refs
 
     def _take_all(
         self, include_sub: bool
@@ -1409,12 +2090,14 @@ class GMLakeAllocator:
         refs: Dict[SBlock, int] = {}
         members: List[PBlock] = []
         total = 0
+        vec = self.vectorized
         for pool in pools:
             for size in reversed(pool._sizes):
                 bucket = pool._settled(size)
                 total += size * len(bucket)
                 members += [e[1] for e in bucket]
-                _count_entry_sids(refs, bucket)
+                if not vec:
+                    _count_entry_sids(refs, bucket)
                 # main/sub sizes are disjoint partitions: no key collisions
                 plan[size] = _Seg(size, bucket)
             pool._buckets = {}
@@ -1423,6 +2106,8 @@ class GMLakeAllocator:
             pool._sizes.clear()
             pool._count = 0
             pool.bytes = 0
+        if vec:
+            refs = self._count_segs_refs(list(plan.values()))
         self._apply_activation(refs)
         return plan, total, refs, members
 
@@ -1522,6 +2207,14 @@ class GMLakeAllocator:
             plan[new_p.size] = _Seg(new_p.size, [entry])
         else:
             seg.entries.append(entry)
+            # new_p has no referencing sBlocks yet, so the aggregated counts
+            # would stay exact — but the raw CSR gains a member row, and a
+            # half-valid cache is a trap: drop it all, S4 is rare
+            seg.ref_sids = None
+            seg.ref_counts = None
+            seg.edge_sid = None
+            seg.edge_ptr = None
+            seg.ref_extra = None
         members.append(new_p)
         # new_p is fresh: its sb_refs are empty, no refs contribution
         return self._stitch_plan(plan, total + new_p.size, refs, members)
@@ -1639,6 +2332,8 @@ class GMLakeAllocator:
                 self._inactive_p.add(p)
                 continue
             del self._pblocks[p.pid]
+            if self.vectorized:
+                self._vec_core.release_pb(p.slot)
             n = len(p.chunks)
             self.device.cu_mem_unmap(n)
             self.device.cu_mem_address_free()
@@ -1681,6 +2376,105 @@ class GMLakeAllocator:
     # ------------------------------------------------------------------
     # debug / test support
     # ------------------------------------------------------------------
+    def _refs_as_dict(self, refs) -> Dict[SBlock, int]:
+        """Normalize a plan's frozen refcounts (Counter or array pair) to a
+        plain ``{SBlock: count}`` dict for invariant comparison."""
+        if not self.vectorized:
+            return dict(refs)
+        by_slot = self._vec_core.sb_by_slot
+        sids, counts = refs
+        return {
+            by_slot[slot]: int(c)
+            for slot, c in zip(sids.tolist(), counts.tolist())
+        }
+
+    def _check_vec_invariants(self) -> None:
+        """Slot-table and cached-array invariants of the vectorized core."""
+        core = self._vec_core
+        # live sBlocks <-> slots: unique, alive, resolvable, exact counts
+        slots_seen = set()
+        for s in self._sblocks.values():
+            slot = s.slot
+            assert 0 <= slot < len(core.sb_by_slot), "sBlock slot out of range"
+            assert slot not in slots_seen, "duplicate sBlock slot"
+            slots_seen.add(slot)
+            assert core.sb_alive[slot], "live sBlock with dead slot"
+            assert core.sb_by_slot[slot] is s, "slot table points elsewhere"
+            truth = sum(1 for p in s.members() if p.active)
+            assert int(core.sb_active[slot]) == truth, "slot activity drifted"
+        alive_slots = set(np.flatnonzero(core.sb_alive).tolist())
+        assert alive_slots == slots_seen, "sb_alive disagrees with registry"
+        # free / quarantined slots are disjoint from live and from each other
+        free = set(core._sb_free)
+        quarantined = set(core._sb_quarantine)
+        assert len(free) == len(core._sb_free), "duplicate free slot"
+        assert not (free & slots_seen), "live slot on the free list"
+        assert not (quarantined & slots_seen), "live slot quarantined"
+        assert not (free & quarantined), "slot both free and quarantined"
+        # pBlock slots: dense, unique among live blocks
+        pb_slots = [p.slot for p in self._pblocks.values()]
+        assert all(sl >= 0 for sl in pb_slots), "unslotted live pBlock"
+        assert len(set(pb_slots)) == len(pb_slots), "duplicate pBlock slot"
+        # cached segment arrays: after an aliveness purge, the aggregate
+        # must equal a fresh count of the slice's membership edges, and a
+        # surviving CSR must aggregate to exactly that
+        pool_segs = [
+            seg
+            for pool in (self._inactive_p.main, self._inactive_p.sub)
+            for segs in pool._segs.values()
+            for seg in segs
+        ]
+        # gen-stale plan segments (slice consumed by a later take) keep
+        # whatever cache they had when the plan froze — harmless, because
+        # the gen check rejects the plan before any cache read. Only
+        # gen-valid segments must stay exact.
+        plan_segs = [
+            seg
+            for s in self._sblocks.values()
+            if s._plan is not None
+            for seg, _g in s._plan
+            if seg.gen == _g
+        ]
+        alive = core.sb_alive
+        for seg in pool_segs + plan_segs:
+            if seg.ref_sids is None:
+                # a CSR never outlives its aggregate (every invalidation
+                # site drops the pair together)
+                assert seg.edge_sid is None and seg.edge_ptr is None
+            # builds the aggregate on miss, folds buffered appends on hit
+            # — the checker is what keeps the cache/fold/CSR machinery
+            # exercised now that the hot take path counts edges directly
+            sids, counts = self._seg_refs(seg)
+            fresh: Dict[int, int] = {}
+            for _pid, p in seg.entries:
+                _count_elements(fresh, map(_get_slot, p.sb_refs))
+            # cached arrays may still name destroyed slots (destroys never
+            # walk the caches); mask-compact here — sound at any time, since
+            # a dead slot stays quarantined until ``_compact_dead_log``
+            # drops every cache — so the invariant is: the *alive* subset
+            # must equal a fresh count
+            if sids.size:
+                keep = alive[sids]
+                if not keep.all():
+                    sids = sids[keep]
+                    counts = counts[keep]
+                    seg.ref_sids = sids
+                    seg.ref_counts = counts
+                    core.counters["ref_purges"] += 1
+            cached = dict(zip(sids.tolist(), counts.tolist()))
+            assert cached == fresh, "cached segment refcounts drifted"
+            # materialize a *fresh* CSR (a cached one may predate destroys
+            # — `sb_refs` scrubbing changes the edge list under it) and
+            # cross-validate its layout and aggregation
+            seg.edge_sid = None
+            seg.edge_ptr = None
+            edge_sid, ptr = self._seg_edges(seg)
+            assert len(ptr) == len(seg.entries) + 1
+            assert ptr[0] == 0 and ptr[-1] == len(edge_sid)
+            csr: Dict[int, int] = {}
+            _count_elements(csr, edge_sid.tolist())
+            assert csr == fresh, "CSR edges disagree with aggregate"
+
     def check_invariants(self) -> None:
         """Validate every structural invariant (test/debug only; O(blocks)).
 
@@ -1708,7 +2502,9 @@ class GMLakeAllocator:
                     assert seg.gen == gen, "plan generation drifted while held"
                     assert all(e[1].size == seg.size for e in seg.entries)
                     _count_entry_sids(truth, seg.entries)
-                assert dict(s._refs) == truth, "frozen plan refs drifted"
+                assert self._refs_as_dict(s._refs) == truth, (
+                    "frozen plan refs drifted"
+                )
         # inactive cached plans: when every generation still matches (the
         # S1 fast path would fire), the cached Counter must equal a fresh
         # count after the dead-log replay — the plan-identity soundness
@@ -1725,7 +2521,9 @@ class GMLakeAllocator:
                 truth = {}
                 for seg, _g in plan:
                     _count_entry_sids(truth, seg.entries)
-                assert dict(s._refs) == truth, "cached plan refs drifted"
+                assert self._refs_as_dict(s._refs) == truth, (
+                    "cached plan refs drifted"
+                )
         # pooled frozen segments: unowned and sized right
         for pool in (self._inactive_p.main, self._inactive_p.sub, self._inactive_s):
             for size, segs in pool._segs.items():
@@ -1738,6 +2536,8 @@ class GMLakeAllocator:
 
         self._reconcile()
         self._inactive_s.sweep()  # drop lazily-delisted (stale) entries
+        if self.vectorized:
+            self._check_vec_invariants()
         seen_chunks: Dict[int, int] = {}
         inactive_ids = {p.pid for p in self._inactive_p}
         for p in self._pblocks.values():
@@ -1753,8 +2553,9 @@ class GMLakeAllocator:
             members = s.members()
             assert s.size == sum(p.size for p in members)
             assert s.n_members == len(members)
-            assert s.active_members == sum(1 for p in members if p.active)
-            assert s.active == (s.active_members > 0)
+            active_n = self._active_of(s)
+            assert active_n == sum(1 for p in members if p.active)
+            assert s.active == (active_n > 0)
             if s.held:  # held: every member stamped with the current gen
                 assert all(
                     p.holder is s and p.holder_gen == s.gen for p in members
@@ -1768,6 +2569,7 @@ class GMLakeAllocator:
                 assert p.pid in self._pblocks
         assert len(seen_chunks) * CHUNK_SIZE == self._chunk_bytes
         assert self._sblock_va_bytes == sum(s.size for s in self._sblocks.values())
+        assert self.peak_sblock_va >= self._sblock_va_bytes
         # the drain queue only ever fills under stream-ordered reclamation
         assert self._deferred_unmap or not self._unmap_queue
         # partition routing + running byte counters

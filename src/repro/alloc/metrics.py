@@ -30,6 +30,10 @@ class AllocatorStats:
     #: hit tallies: seg_reuse / hold_fast / shell_reuse). Never part of the
     #: golden digests — purely observability for the profile harness.
     counters: Optional[dict] = None
+    #: GMLake round-5 vectorized-core counters (enabled / numpy_fallback /
+    #: seg_cache_builds / ref_purges / ...). Same observability-only
+    #: contract as ``counters``; surfaced via ``ReplayResult.vec_counters``.
+    vec_counters: Optional[dict] = None
 
     def __post_init__(self) -> None:
         # on_alloc/on_free run once per replayed event; when no timeline is
@@ -139,6 +143,10 @@ class ReplayResult:
     #: ``AllocatorEventLog.summary()`` when the backend logged recovery /
     #: reclamation events during the replay; None on a quiet run
     recovery: Optional[dict] = None
+    #: snapshot of the backend's vectorized-core counters (GMLake round 5:
+    #: enabled / numpy_fallback / seg_cache_builds / ref_purges / ...);
+    #: None for backends without a vectorized core
+    vec_counters: Optional[dict] = None
 
     @property
     def utilization(self) -> float:

@@ -552,6 +552,9 @@ def _resolve_allocator(
 
 def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
     event_log = getattr(allocator, "event_log", None)
+    # vectorized-core observability (GMLake round 5), surfaced exactly like
+    # recovery summaries: snapshot the backend's counter dict when present
+    vec_counters = getattr(allocator, "vec_counters", None)
     return ReplayResult(
         name=allocator.name,
         stats=allocator.stats,
@@ -561,6 +564,7 @@ def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
         oom_at_event=oom_at,
         state_counts=dict(getattr(allocator, "state_counts", {})) or None,
         recovery=event_log.summary() if event_log is not None and len(event_log) else None,
+        vec_counters=dict(vec_counters) if vec_counters is not None else None,
     )
 
 
@@ -571,6 +575,7 @@ def replay(
     check_invariants_every: int = 0,
     capacity_bytes: int = 80 * GB,
     fault_schedule: Optional[FaultSchedule] = None,
+    **alloc_kwargs,
 ) -> ReplayResult:
     """Feed a trace through an allocator; returns metrics + cost + wall time.
 
@@ -595,9 +600,14 @@ def replay(
     ``fault_schedule`` replays under injected VMM faults (see
     ``FaultInjector``): transient failures and capacity shrinks surface as
     ``AllocatorOOM`` only when a backend's recovery ladder is exhausted.
+
+    Extra keyword arguments are forwarded to the backend constructor when
+    ``allocator`` is a registry key (e.g. ``vectorized=False`` or
+    ``va_budget="tight"`` for gmlake's array-core / StitchFree knobs).
     """
     allocator = _resolve_allocator(
-        allocator, trace, capacity_bytes, fault_schedule=fault_schedule
+        allocator, trace, capacity_bytes, fault_schedule=fault_schedule,
+        **alloc_kwargs,
     )
     live: Dict[int, object] = {}
     oom = False
@@ -667,6 +677,7 @@ def replay_batched(
     batch_size: int = 8192,
     capacity_bytes: int = 80 * GB,
     fault_schedule: Optional[FaultSchedule] = None,
+    **alloc_kwargs,
 ) -> ReplayResult:
     """Replay over the pre-compiled event arrays in fixed-size batches.
 
@@ -677,9 +688,13 @@ def replay_batched(
     rather than one event. Stats stay exact — ``AllocatorStats`` binds its
     no-timeline fast path at construction when ``record_timeline`` is off,
     which is what makes the per-event accounting cheap enough here.
+
+    Extra keyword arguments are forwarded to the backend constructor when
+    ``allocator`` is a registry key, as in ``replay``.
     """
     allocator = _resolve_allocator(
-        allocator, trace, capacity_bytes, fault_schedule=fault_schedule
+        allocator, trace, capacity_bytes, fault_schedule=fault_schedule,
+        **alloc_kwargs,
     )
     ops, tids, sizes, labels = trace.compiled()
     live: Dict[int, object] = {}

@@ -416,6 +416,7 @@ class ServeEngine:
         alloc = self.kv.arena.allocator
         counts = getattr(alloc, "state_counts", None)  # gmlake-style backends
         event_log = getattr(alloc, "event_log", None)
+        vec_counters = getattr(alloc, "vec_counters", None)  # gmlake round 5
         device = self.kv.arena.device_model
         fault_counts = getattr(device, "fault_counts", None)
         return {
@@ -433,4 +434,6 @@ class ServeEngine:
             "injected_faults": (dict(fault_counts)
                                 if fault_counts else None),
             "pending_unmaps": getattr(alloc, "pending_unmaps", 0),
+            "vec_counters": (dict(vec_counters)
+                             if vec_counters is not None else None),
         }

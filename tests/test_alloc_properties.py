@@ -14,14 +14,17 @@ every operation and at drain:
     backend about what is still reserved;
   * gmlake's plan-identity fast paths are *frozen policy*: the same
     program replayed with ``plan_identity=False`` must produce identical
-    S1..S5 state counts and peaks.
+    S1..S5 state counts and peaks;
+  * gmlake's round-5 vectorized core is likewise frozen policy: the
+    object-path escape hatch (``vectorized=False``) gets its own fuzz
+    class, and a parity property pins digest identity between the cores.
 
 Runs through ``_hypothesis_compat``: with hypothesis installed these are
 real property tests; without it the deterministic fallback executes the
 same number of seeded examples, so the layer never silently skips.
-200 examples per backend (5 x 200 = 1000 programs + 100 parity pairs)
-keep within the suite's wall budget because programs are pure host-side
-metadata churn.
+200 examples per fuzz class (6 x 200 = 1200 programs + 2 x 100 parity
+pairs) keep within the suite's wall budget because programs are pure
+host-side metadata churn.
 """
 
 import random
@@ -80,16 +83,19 @@ def _drain(alloc, live, device):
 
 class _Fuzz:
     """One @given body per backend; subclasses pin the backend name so
-    pytest reports (and the fallback seeds) stay per-backend stable."""
+    pytest reports (and the fallback seeds) stay per-backend stable.
+    ``kwargs`` lets a subclass fuzz a non-default configuration of an
+    already-registered backend (round 5: gmlake's object-path core)."""
 
     backend = None
+    kwargs = {}
 
     @given(st.integers(min_value=0, max_value=2**31 - 1))
     @settings(max_examples=200, deadline=None)
     def test_random_interleaving_upholds_contract(self, seed):
         ops = _program(seed)
         device = VMMDevice(CAPACITY)
-        alloc = registry.create(self.backend, device)
+        alloc = registry.create(self.backend, device, **self.kwargs)
         # run with frees actually applied: re-execute with a live list
         live = []
         n_ok = 0
@@ -130,6 +136,15 @@ class TestGMLakeFuzz(_Fuzz):
     backend = "gmlake"
 
 
+class TestGMLakeObjectPathFuzz(_Fuzz):
+    """The ``vectorized=False`` escape hatch is a supported long-term mode
+    (it is the A/B reference and the numpy-free fallback), so it gets the
+    same fuzz coverage as the default vectorized core."""
+
+    backend = "gmlake"
+    kwargs = {"vectorized": False}
+
+
 class TestSTAllocFuzz(_Fuzz):
     backend = "stalloc"
 
@@ -149,10 +164,10 @@ def test_every_backend_is_fuzzed():
 # ---------------------------------------------------------------------------
 
 
-def _gmlake_digest(seed: int, plan_identity: bool):
+def _gmlake_digest(seed: int, plan_identity: bool = True, **kwargs):
     ops = _program(seed)
     device = VMMDevice(CAPACITY)
-    alloc = GMLakeAllocator(device, plan_identity=plan_identity)
+    alloc = GMLakeAllocator(device, plan_identity=plan_identity, **kwargs)
     live = []
     for op, arg in ops:
         if op == "alloc":
@@ -183,3 +198,13 @@ def test_gmlake_plan_identity_parity(seed):
     """Round-4 fast paths must be invisible: identical state counts and
     peaks with plan_identity on and off, for any seeded interleaving."""
     assert _gmlake_digest(seed, True) == _gmlake_digest(seed, False)
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_gmlake_vectorized_parity(seed):
+    """Round-5 vectorized core must be invisible: identical state counts
+    and peaks with vectorized on and off, for any seeded interleaving."""
+    assert _gmlake_digest(seed, vectorized=True) == _gmlake_digest(
+        seed, vectorized=False
+    )

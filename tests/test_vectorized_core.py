@@ -1,0 +1,325 @@
+"""Round-5 vectorized take/free core: A/B parity, policy knob, counters.
+
+The vectorized core flattens membership/refcount bookkeeping into dense
+slot-indexed numpy arrays (CSR edge arrays per frozen segment, an
+``sb_active`` refcount table, quarantined slot recycling). It is pure
+mechanical sympathy: ``GMLakeAllocator(vectorized=False)`` must replay
+every program to the exact same digest — state counts, peaks, OOM
+points, modeled device cost — which these tests pin on randomized
+take/free/split/destroy interleavings, on real traces, and under forced
+dead-log compaction (the quarantine-recycling edge).
+
+The ``va_budget`` policy knob is the deliberate *non*-bit-identical
+tier: a looser StitchFree VA budget trades address-space headroom for
+fewer destroy/remap cycles. Its trade-off is pinned by the
+load-independent ``model_cost_per_event`` signal (never wall time):
+cost(speed) < cost(paper) <= cost(tight), peak stitched VA strictly the
+other way around.
+"""
+
+import random
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.alloc.caching_allocator import AllocatorOOM
+from repro.alloc.chunks import VMMDevice
+from repro.alloc.gmlake import VA_BUDGET_TIERS, GMLakeAllocator
+from repro.core import GB, MB, PAPER_MODELS, inference_trace, replay, training_trace
+
+from _hypothesis_compat import given, settings, st
+
+
+def _digest(a: GMLakeAllocator) -> dict:
+    return dict(
+        state_counts=dict(a.state_counts),
+        active=a.stats.active_bytes,
+        reserved=a.reserved_bytes,
+        peak_active=a.stats.peak_active,
+        peak_reserved=a.stats.peak_reserved,
+        n_alloc=a.stats.n_alloc,
+        n_free=a.stats.n_free,
+        model_cost=round(a.device.ledger.total, 9),
+    )
+
+
+class _Pair:
+    """Drive the vectorized and object cores in lockstep; every op must
+    produce identical observable behaviour, and ``check`` runs both
+    invariant validators (slot tables, CSR caches, refcount truth) and
+    compares full digests."""
+
+    def __init__(self, capacity=2 * GB, **kw):
+        self.vec = GMLakeAllocator(VMMDevice(capacity), vectorized=True, **kw)
+        self.obj = GMLakeAllocator(VMMDevice(capacity), vectorized=False, **kw)
+        self.live = {}
+        self._next = 0
+
+    def malloc(self, size) -> int:
+        oom_v = oom_o = False
+        av = ao = None
+        try:
+            av = self.vec.malloc(size)
+        except AllocatorOOM:
+            oom_v = True
+        try:
+            ao = self.obj.malloc(size)
+        except AllocatorOOM:
+            oom_o = True
+        assert oom_v == oom_o, "OOM behaviour diverged between cores"
+        if oom_v:
+            return -1
+        assert av.block_size == ao.block_size
+        tid = self._next
+        self._next += 1
+        self.live[tid] = (av, ao)
+        return tid
+
+    def free(self, tid) -> None:
+        av, ao = self.live.pop(tid)
+        self.vec.free(av)
+        self.obj.free(ao)
+
+    def check(self) -> None:
+        self.vec.check_invariants()
+        self.obj.check_invariants()
+        assert _digest(self.vec) == _digest(self.obj)
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings (takes, frees, splits via odd sizes, destroys
+# via a tight VA budget)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_lockstep_interleaving_parity(seed):
+    rng = random.Random(seed)
+    pair = _Pair(capacity=2 * GB, sblock_va_budget=700 * MB)
+    tids = []
+    for i in range(70):
+        if tids and rng.random() < 0.45:
+            pair.free(tids.pop(rng.randrange(len(tids))))
+        else:
+            # odd sizes force splits; the spread forces multi-size stitches
+            tid = pair.malloc(rng.randrange(2 * MB, 320 * MB))
+            if tid >= 0:
+                tids.append(tid)
+        if i % 9 == 0:
+            pair.check()
+    while tids:
+        pair.free(tids.pop())
+    pair.check()
+
+
+def test_interleaving_exercises_vectorized_machinery():
+    """The lockstep program must actually drive the array paths: cached
+    segment builds, destroy purges, and (with a shrunken dead log)
+    quarantined-slot compaction — otherwise the parity above is vacuous."""
+    rng = random.Random(123)
+    pair = _Pair(capacity=2 * GB, sblock_va_budget=700 * MB)
+    pair.vec.DEAD_LOG_LIMIT = 8
+    pair.obj.DEAD_LOG_LIMIT = 8
+    tids = []
+    for i in range(220):
+        if tids and rng.random() < 0.45:
+            pair.free(tids.pop(rng.randrange(len(tids))))
+        else:
+            tid = pair.malloc(rng.randrange(2 * MB, 320 * MB))
+            if tid >= 0:
+                tids.append(tid)
+        if i % 31 == 0:
+            pair.check()
+    while tids:
+        pair.free(tids.pop())
+    pair.check()
+    c = pair.vec.vec_counters
+    assert c["enabled"] == 1 and c["numpy_fallback"] == 0
+    assert c["seg_cache_builds"] > 0
+    assert c["ref_purges"] > 0, "no destroy ever purged a cached segment"
+    assert c["dead_compactions"] > 0, "quarantine recycling never ran"
+    assert pair.obj.vec_counters["enabled"] == 0
+
+
+# ---------------------------------------------------------------------------
+# trace-level digest identity (golden-style, both cores)
+# ---------------------------------------------------------------------------
+
+
+def _trace_digest(trace, cadence, **kwargs):
+    res, marks = replay(
+        trace, "gmlake", check_invariants_every=cadence, **kwargs
+    )
+    return (
+        res.state_counts, res.stats.peak_active, res.stats.peak_reserved,
+        res.stats.n_alloc, res.stats.n_free, round(res.model_cost, 9),
+        res.oom, res.oom_at_event, marks,
+    )
+
+
+@pytest.mark.parametrize("cadence", [0, 97])
+def test_serving_trace_digest_identical_either_core(cadence):
+    trace = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=600, seed=3)
+    assert _trace_digest(trace, cadence, vectorized=True) == _trace_digest(
+        trace, cadence, vectorized=False
+    )
+
+
+def test_training_trace_digest_identical_either_core():
+    trace = training_trace(
+        PAPER_MODELS["opt-1.3b"], "LR", world=4, batch=8, seq=2048, iters=4, seed=1
+    )
+    assert _trace_digest(trace, 53, vectorized=True) == _trace_digest(
+        trace, 53, vectorized=False
+    )
+
+
+@pytest.mark.parametrize("budget", ["tight", "paper", "speed"])
+def test_budget_tiers_digest_identical_either_core(budget):
+    """Every policy tier must itself be core-invariant: the knob changes
+    *policy*, the array core must never change behaviour within a tier."""
+    trace = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=600, seed=7)
+    assert _trace_digest(trace, 61, vectorized=True, va_budget=budget) == (
+        _trace_digest(trace, 61, vectorized=False, va_budget=budget)
+    )
+
+
+# ---------------------------------------------------------------------------
+# va_budget knob: resolution + modeled-cost-refereed trade-off
+# ---------------------------------------------------------------------------
+
+
+def test_va_budget_resolution():
+    cap = 2 * GB
+    mk = lambda **kw: GMLakeAllocator(VMMDevice(cap), **kw)
+    assert mk().sblock_va_budget == 4 * cap  # default == "paper"
+    assert mk(va_budget="paper").sblock_va_budget == 4 * cap
+    assert mk(va_budget="tight").sblock_va_budget == cap
+    assert mk(va_budget="speed").sblock_va_budget == float("inf")
+    assert mk(va_budget=2.5).sblock_va_budget == int(2.5 * cap)
+    assert mk(va_budget=700 * MB).sblock_va_budget == 700 * MB
+    # the legacy byte knob wins over the tier knob
+    assert mk(sblock_va_budget=512 * MB, va_budget="speed").sblock_va_budget == 512 * MB
+    with pytest.raises(ValueError) as ei:
+        mk(va_budget="warp")
+    for tier in VA_BUDGET_TIERS:
+        assert tier in str(ei.value)  # the error names the valid tiers
+
+
+def test_va_budget_tradeoff_pinned_by_model_cost():
+    """The fast tier is refereed by the load-independent modeled cost, not
+    wall time: a looser budget must strictly cut modeled cost/event on the
+    destroy-churn serving trace, and must strictly pay for it in peak
+    stitched address space."""
+    trace = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=1200, seed=5)
+    cost = {}
+    peak_va = {}
+    for budget in ("tight", "paper", "speed"):
+        a = GMLakeAllocator(VMMDevice(80 * GB), va_budget=budget)
+        res, _ = replay(trace, a)
+        cost[budget] = res.model_cost / (res.stats.n_alloc + res.stats.n_free)
+        peak_va[budget] = a.peak_sblock_va
+    assert cost["speed"] < cost["paper"] <= cost["tight"]
+    assert peak_va["tight"] < peak_va["paper"] < peak_va["speed"]
+
+
+# ---------------------------------------------------------------------------
+# counters surfaced through the standard channels (no side channels)
+# ---------------------------------------------------------------------------
+
+
+def test_vec_counters_surfaced_in_replay_result():
+    trace = inference_trace(PAPER_MODELS["vicuna-13b"], n_requests=400, seed=0)
+    res_v, _ = replay(trace, "gmlake", vectorized=True)
+    res_o, _ = replay(trace, "gmlake", vectorized=False)
+    assert res_v.vec_counters["enabled"] == 1
+    assert res_v.vec_counters["numpy_fallback"] == 0
+    assert res_o.vec_counters["enabled"] == 0
+    # non-gmlake backends have no vectorized core and surface None
+    res_c, _ = replay(trace, "caching")
+    assert res_c.vec_counters is None
+
+
+def test_vec_counters_surfaced_in_memory_report():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models.api import family_of
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    cfg = get_arch("smollm-135m").smoke
+    fam = family_of(cfg)
+    params = fam.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params, EngineConfig(max_batch=2, max_len=64, n_chunks=64)
+    )
+    rep = eng.memory_report()
+    assert "vec_counters" in rep
+    alloc = eng.kv.arena.allocator
+    if getattr(alloc, "vec_counters", None) is not None:
+        assert rep["vec_counters"] == alloc.vec_counters
+
+
+# ---------------------------------------------------------------------------
+# numpy-absence guard: the object path must import and serve without numpy
+# ---------------------------------------------------------------------------
+
+
+_NO_NUMPY_PROG = textwrap.dedent(
+    """
+    import sys
+
+    class _Blocker:
+        def find_spec(self, name, path=None, target=None):
+            if name == "numpy" or name.startswith("numpy."):
+                raise ImportError("numpy blocked for the object-path guard test")
+
+    sys.modules.pop("numpy", None)
+    sys.meta_path.insert(0, _Blocker())
+
+    from repro.alloc.chunks import VMMDevice, MB, GB, pack_extents, ChunkRun
+    from repro.alloc.gmlake import GMLakeAllocator, np
+
+    assert np is None, "numpy import should have been blocked"
+
+    # extent packing falls back to the scalar scan
+    assert [ (e.start, e.n) for e in pack_extents([3, 4, 5, 9]) ] == [(3, 3), (9, 1)]
+    assert pack_extents(ChunkRun([1, 2, 4])) == pack_extents([1, 2, 4])
+
+    # default resolution degrades to the object path; an explicit
+    # vectorized=True request records the fallback instead of crashing
+    for kwargs in ({}, {"vectorized": True}, {"vectorized": False}):
+        a = GMLakeAllocator(VMMDevice(2 * GB), **kwargs)
+        assert a.vectorized is False
+        live = [a.malloc(48 * MB) for _ in range(12)]
+        for x in live[::2]:
+            a.free(x)
+        live = live[1::2] + [a.malloc(96 * MB) for _ in range(4)]
+        a.check_invariants()
+        for x in live:
+            a.free(x)
+        a.check_invariants()
+        assert a.stats.active_bytes == 0
+    a = GMLakeAllocator(VMMDevice(2 * GB), vectorized=True)
+    assert a.vec_counters["numpy_fallback"] == 1
+    print("OK")
+    """
+)
+
+
+def test_object_path_serves_without_numpy():
+    """With numpy unimportable, the module must import, default to the
+    object core, pass its invariants over a malloc/free/stitch workout,
+    and record ``numpy_fallback`` when vectorized=True was asked for."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _NO_NUMPY_PROG],
+        capture_output=True,
+        text=True,
+        cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == "OK"
