@@ -103,39 +103,60 @@ def bench_rows(fast: bool, allocators: Optional[Sequence[str]] = None) -> List[R
                 extra = (extra + " " if extra else "") + (
                     f"seed:{seed_us:.1f}us x{seed_us / us_per_event:.2f}"
                 )
-            rows.append(
-                Row(
-                    name,
-                    us_per_event,
-                    events_per_sec,
-                    extra,
-                    metrics={
-                        "model_cost": res.model_cost,
-                        "model_cost_per_event": res.model_cost / n_events,
-                        "peak_reserved": res.stats.peak_reserved,
-                        "oom": res.oom,
-                    },
-                )
-            )
+            metrics = {
+                "model_cost": res.model_cost,
+                "model_cost_per_event": res.model_cost / n_events,
+                "peak_reserved": res.stats.peak_reserved,
+                "oom": res.oom,
+            }
+            if res.hybrid_counters is not None:
+                # planned/spilled routing split: deterministic for the
+                # fixed-seed trace, so compare_replay.py blocks on drift
+                # (a silent route-everything-to-spill must not pass)
+                metrics["hybrid_counters"] = dict(res.hybrid_counters)
+            rows.append(Row(name, us_per_event, events_per_sec, extra,
+                            metrics=metrics))
     return rows
+
+
+def missing_backends(payload: dict) -> List[str]:
+    """Registered backends with no row in a BENCH_replay.json payload.
+
+    The artifact is the perf trajectory future PRs diff against; a backend
+    registered after the last full run would silently escape the
+    regression gate, so staleness is a loud failure, not a warning — both
+    here after a full-registry run and in the tier-1 suite, which checks
+    the checked-in artifact with this same helper.
+    """
+    covered = set()
+    for row in payload.get("rows", []):
+        name = row.get("name", "")
+        if "/" in name:
+            covered.add(name.rsplit("/", 1)[1])
+    return [n for n in registry.names() if n not in covered]
 
 
 def run(fast: bool = False, allocators: Optional[Sequence[str]] = None) -> None:
     rows = bench_rows(fast, allocators)
     emit(rows, "replay throughput: host us/event, events/sec (derived)")
-    emit_json(
-        "replay",
-        {
-            "benchmark": "replay_throughput",
-            "fast": fast,
-            "allocators": list(allocators) if allocators else registry.names(),
-            "unit": {
-                "us_per_call": "host microseconds per event",
-                "derived": "events per second",
-                "model_cost": "modeled device-API cost, cuMalloc units "
-                "(load-independent; primary regression-gate signal)",
-            },
-            "rows": [r.as_dict() for r in rows],
-            "seed_us_per_event": SEED_US_PER_EVENT,
+    payload = {
+        "benchmark": "replay_throughput",
+        "fast": fast,
+        "allocators": list(allocators) if allocators else registry.names(),
+        "unit": {
+            "us_per_call": "host microseconds per event",
+            "derived": "events per second",
+            "model_cost": "modeled device-API cost, cuMalloc units "
+            "(load-independent; primary regression-gate signal)",
         },
-    )
+        "rows": [r.as_dict() for r in rows],
+        "seed_us_per_event": SEED_US_PER_EVENT,
+    }
+    emit_json("replay", payload)
+    if not allocators:  # a full-registry run must cover the registry
+        missing = missing_backends(payload)
+        if missing:
+            raise SystemExit(
+                f"BENCH_replay.json misses registered backend(s) "
+                f"{', '.join(missing)} — registry-driven coverage broke"
+            )

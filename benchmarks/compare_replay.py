@@ -17,6 +17,13 @@ The gate is **two-tier**, modeled cost first, wall time second:
   2. ``us_per_call`` — host wall time, the number users feel, but noisy
      (~±20 % on a loaded runner). Gated at the looser ``--threshold``.
 
+Rows carrying ``hybrid_counters`` (the hybrid backend's planned/spilled
+routing split) get an exact-match check *before* both tiers: the split is
+a deterministic function of the plan on the fixed-seed trace, so any
+drift — in particular a plan that silently stops covering requests and
+routes everything to the spill path — **blocks** (subject to
+``--annotate-only``), attributed as a ``hybrid`` finding.
+
 A **serving** tier activates when both ``--serving-baseline`` and
 ``--serving-candidate`` point at BENCH_serving.json files (see
 ``benchmarks/bench_serving.py``): per-backend, per-SLO-class modeled
@@ -61,30 +68,58 @@ import sys
 def _rows(payload: dict) -> dict:
     try:
         return {
-            r["name"]: (float(r["us_per_call"]), r.get("model_cost_per_event"))
+            r["name"]: (
+                float(r["us_per_call"]),
+                r.get("model_cost_per_event"),
+                r.get("hybrid_counters"),
+            )
             for r in payload["rows"]
         }
     except (KeyError, TypeError) as e:
         raise ValueError(f"not a BENCH_replay.json payload: {e}") from e
 
 
+def _hybrid_digest(counters) -> str:
+    """Routing-split digest of a row's ``hybrid_counters``: which requests
+    the plan served vs spilled to the stitching core. Deterministic for
+    the fixed-seed trace, so *any* drift is a policy change — in
+    particular a plan that silently stops covering anything (everything
+    routed to spill) must fail the gate, not slide through as a small
+    modeled-cost wobble."""
+    return (
+        f"planned {counters.get('planned_allocs')} "
+        f"({counters.get('planned_bytes')} B) / "
+        f"spilled {counters.get('spilled_allocs')} "
+        f"({counters.get('spilled_bytes')} B)"
+    )
+
+
 def compare(baseline: dict, candidate: dict, threshold: float, model_threshold: float):
     """Returns (regressions, improvements, missing).
 
     ``regressions``/``improvements`` map row name -> (signal, old, new,
-    ratio) where ``signal`` is ``"model"`` (modeled device-API cost — the
-    load-independent tier, checked first) or ``"wall"`` (host µs/event).
-    A row only reaches the wall tier if its modeled signal is clean, so a
-    policy change is always attributed to the modeled number.
+    ratio) where ``signal`` is ``"hybrid"`` (planned/spilled routing split
+    — exact-match, any drift blocks), ``"model"`` (modeled device-API
+    cost — the load-independent tier, checked first) or ``"wall"`` (host
+    µs/event). A row only reaches the wall tier if its deterministic
+    signals are clean, so a policy change is always attributed to the
+    deterministic number.
     """
     base = _rows(baseline)
     cand = _rows(candidate)
     regressions, improvements = {}, {}
-    for name, (new_us, new_model) in cand.items():
+    for name, (new_us, new_model, new_hc) in cand.items():
         entry = base.get(name)
         if entry is None:
             continue
-        old_us, old_model = entry
+        old_us, old_model, old_hc = entry
+        if old_hc is not None and new_hc is not None and old_hc != new_hc:
+            # deterministic routing split changed; this outranks both the
+            # modeled and wall tiers for this row
+            regressions[name] = (
+                "hybrid", _hybrid_digest(old_hc), _hybrid_digest(new_hc), 1.0
+            )
+            continue
         if old_model and new_model is not None:
             ratio = new_model / old_model
             if ratio > 1.0 + model_threshold:
@@ -358,6 +393,11 @@ def main(argv=None) -> int:
         print(f"::warning::replay perf {name}: present in baseline, missing now")
     for name, (sig, old, new, ratio) in sorted(regressions.items()):
         level = "warning" if args.annotate_only else "error"
+        if sig == "hybrid":
+            print(f"::{level}::replay hybrid routing drift {name}: "
+                  f"{old} -> {new} (deterministic planned/spilled split "
+                  f"changed: the plan covers different requests)")
+            continue
         what = "policy (modeled-cost)" if sig == "model" else "wall-time"
         thresh = args.model_threshold if sig == "model" else args.threshold
         print(f"::{level}::replay {what} regression {name}: "

@@ -22,6 +22,9 @@ Layout (bottom-up):
   ellm               "ellm" backend — elastic weight arena that inflates/
                      deflates its reservation with admission pressure and
                      spills to VMS stitching (after arXiv 2506.15155)
+  hybrid             "hybrid" backend — stalloc's packed placement plan
+                     for the profiled prefix, an embedded gmlake core for
+                     the dynamic tail (divergence + capacity spills)
 
 Adding a backend: subclass nothing — implement the protocol, decorate the
 class with ``@registry.register("yourname", AllocatorCapabilities(...))``,
@@ -72,6 +75,7 @@ from .caching_allocator import (
 from .gmlake import GMLakeAllocator, PBlock, SBlock
 from .stalloc import PlacementPlan, PlannedBlock, STAllocAllocator, build_plan
 from .ellm import ELLMAllocator, ElasticBlock
+from .hybrid import HybridAllocator
 
 __all__ = [
     "registry",
@@ -114,4 +118,5 @@ __all__ = [
     "build_plan",
     "ELLMAllocator",
     "ElasticBlock",
+    "HybridAllocator",
 ]

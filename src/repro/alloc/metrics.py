@@ -147,6 +147,10 @@ class ReplayResult:
     #: enabled / numpy_fallback / seg_cache_builds / ref_purges / ...);
     #: None for backends without a vectorized core
     vec_counters: Optional[dict] = None
+    #: planned-vs-spilled routing tallies of the hybrid backend
+    #: (planned_allocs/planned_bytes/spilled_allocs/spilled_bytes);
+    #: None for backends without a planned/spill split
+    hybrid_counters: Optional[dict] = None
 
     @property
     def utilization(self) -> float:

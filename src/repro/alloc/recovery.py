@@ -27,7 +27,7 @@ Every attempt and outcome is appended to the backend's
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Tuple
+from typing import Callable, List
 
 from .chunks import DEVICE_SYNC_COST, DeviceOOM, TransientDeviceError
 from .metrics import AllocatorEventLog
@@ -57,7 +57,7 @@ def recovery_enabled(device, recovery) -> bool:
 
 def run_ladder(
     attempt: Callable[[], object],
-    stages: List[Tuple[str, Callable[[], int]]],
+    stages: List[tuple],  # (name, fn[, skip_transient])
     *,
     device,
     log: AllocatorEventLog,
@@ -69,10 +69,13 @@ def run_ladder(
     ``attempt`` performs the allocation (raising ``DeviceOOM`` /
     ``TransientDeviceError`` on failure, from a state-neutral point);
     ``stages`` are ordered ``(name, fn)`` reclamation callables returning
-    the amount reclaimed. After the rungs are exhausted, bounded retries
-    with exponential modeled backoff clear transient bursts. Raises the
-    last ``DeviceOOM`` if nothing helps — the caller converts that to
-    ``AllocatorOOM`` exactly as on the legacy path.
+    the amount reclaimed. A stage may carry a third element,
+    ``skip_transient=True``, marking a *structural* rung (e.g. re-planning
+    to a shrunken capacity) that must not fire on transient fault bursts —
+    those are what the bounded retries below are for. After the rungs are
+    exhausted, bounded retries with exponential modeled backoff clear
+    transient bursts. Raises the last ``DeviceOOM`` if nothing helps — the
+    caller converts that to ``AllocatorOOM`` exactly as on the legacy path.
     """
     try:
         return attempt()
@@ -84,7 +87,11 @@ def run_ladder(
         transient=isinstance(err, TransientDeviceError),
         error=type(err).__name__,
     )
-    for name, fn in stages:
+    for stage in stages:
+        name, fn = stage[0], stage[1]
+        if len(stage) > 2 and stage[2] and isinstance(err, TransientDeviceError):
+            log.append("reclaim_skipped", stage=name, what=what)
+            continue
         freed = fn()
         log.append("reclaim." + name, freed=int(freed))
         try:

@@ -555,6 +555,7 @@ def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
     # vectorized-core observability (GMLake round 5), surfaced exactly like
     # recovery summaries: snapshot the backend's counter dict when present
     vec_counters = getattr(allocator, "vec_counters", None)
+    hybrid_counters = getattr(allocator, "hybrid_counters", None)
     return ReplayResult(
         name=allocator.name,
         stats=allocator.stats,
@@ -565,6 +566,9 @@ def _replay_result(allocator, wall, oom, oom_at) -> ReplayResult:
         state_counts=dict(getattr(allocator, "state_counts", {})) or None,
         recovery=event_log.summary() if event_log is not None and len(event_log) else None,
         vec_counters=dict(vec_counters) if vec_counters is not None else None,
+        hybrid_counters=(
+            dict(hybrid_counters) if hybrid_counters is not None else None
+        ),
     )
 
 

@@ -417,6 +417,7 @@ class ServeEngine:
         counts = getattr(alloc, "state_counts", None)  # gmlake-style backends
         event_log = getattr(alloc, "event_log", None)
         vec_counters = getattr(alloc, "vec_counters", None)  # gmlake round 5
+        hybrid_counters = getattr(alloc, "hybrid_counters", None)
         device = self.kv.arena.device_model
         fault_counts = getattr(device, "fault_counts", None)
         return {
@@ -436,4 +437,6 @@ class ServeEngine:
             "pending_unmaps": getattr(alloc, "pending_unmaps", 0),
             "vec_counters": (dict(vec_counters)
                              if vec_counters is not None else None),
+            "hybrid_counters": (dict(hybrid_counters)
+                                if hybrid_counters is not None else None),
         }

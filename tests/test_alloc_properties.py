@@ -153,6 +153,10 @@ class TestELLMFuzz(_Fuzz):
     backend = "ellm"
 
 
+class TestHybridFuzz(_Fuzz):
+    backend = "hybrid"
+
+
 def test_every_backend_is_fuzzed():
     """A new backend registration must join the property layer."""
     fuzzed = {c.backend for c in _Fuzz.__subclasses__()}

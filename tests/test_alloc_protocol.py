@@ -185,22 +185,35 @@ def test_stalloc_planned_double_free_is_detected():
         a.free(x)
 
 
-def test_stalloc_refuses_replanning_a_used_instance():
-    """One instance, one plan: re-preparing after placements were handed
-    out would desynchronise cursor/reservation/plan."""
+def test_stalloc_replans_a_used_instance_by_draining_the_arena():
+    """``prepare`` is re-entrant: re-planning a used instance retires the
+    live arena (outstanding placements keep their slices; the reservation
+    is released on their last free) and restarts the cursor on the fresh
+    plan — the drain-or-migrate contract the recovery ladder's re-plan
+    rung depends on."""
     from repro.core import PAPER_MODELS, training_trace
 
     a = make("stalloc", capacity=16 * GB)
     tr = training_trace(
         PAPER_MODELS["opt-1.3b"], "LR", world=1, batch=2, seq=512, iters=1
     )
-    plan = a.prepare(tr)
-    a.prepare(tr)  # unused instance: replanning is harmless
-    x = a.malloc(plan.sizes[0])  # a planned hit: reserves + advances cursor
+    plan1 = a.prepare(tr)
+    a.prepare(tr)  # unused instance: replanning is a no-op swap
+    x = a.malloc(plan1.sizes[0])  # a planned hit: reserves + advances cursor
     assert a.planned_allocs == 1
-    with pytest.raises(RuntimeError, match="fresh backend"):
-        a.prepare(tr)
-    a.free(x)
+    plan2 = a.prepare(tr)  # used instance: old arena retires, keeps x alive
+    assert a.reserved_bytes == plan1.capacity  # draining, not freed
+    y = a.malloc(plan2.sizes[0])  # reserves the NEW arena alongside
+    assert a.planned_allocs == 2
+    assert a.reserved_bytes == plan1.capacity + plan2.capacity
+    a.free(x)  # last block of the retired arena: its reservation drops
+    assert a.reserved_bytes == plan2.capacity
+    assert a.event_log.summary()["counts"] == {
+        "arena_retired": 1,
+        "arena_drained": 1,
+    }
+    a.free(y)
+    a.check_invariants()
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +225,7 @@ def test_recovery_capability_registry():
     """The recovery flag is declared where the ladder is implemented, and
     ``with_capability`` surfaces it to backend-generic consumers."""
     recovering = registry.with_capability("recovery")
-    assert set(recovering) == {"caching", "gmlake", "stalloc", "ellm"}
+    assert set(recovering) == {"caching", "gmlake", "stalloc", "ellm", "hybrid"}
     assert "native" not in recovering
 
 
