@@ -1,0 +1,81 @@
+"""Chaos campaign bench: scenario x backend x mode verdicts, published.
+
+Runs the standard chaos campaign (``repro.chaos``) — preemption-derived
+fault schedules against every registered backend through the replay and
+serving legs, plus the jax-backed kill/recover engine leg outside fast
+mode — and publishes the structured verdicts as ``BENCH_chaos.json`` for
+the CI gate (``compare_replay.py --chaos-baseline/--chaos-candidate``).
+
+The campaign IS the acceptance harness: any failed leg (liveness, safety
+— sentinel violations, raw DeviceOOM escapes, drain leaks, unrecovered
+replay faults — or a missed SLO floor) exits non-zero, exactly like
+``bench_faults``'s seeded-recovery contract.
+
+CSV rows: ``chaos_<scenario>_<backend>_<mode>, us_per_leg, ok``.
+"""
+
+from __future__ import annotations
+
+from .common import Row, emit, emit_json
+
+
+def run(fast: bool = False, allocators=None) -> None:
+    from repro.chaos import CampaignConfig, run_campaign
+
+    cfg = CampaignConfig(
+        backends=tuple(allocators) if allocators else (),
+        fast=fast,
+    )
+    result = run_campaign(cfg)
+    payload = result.to_payload()
+
+    rows = []
+    us_per_leg = (
+        result.wall_seconds * 1e6 / len(result.verdicts)
+        if result.verdicts
+        else 0.0
+    )
+    legs = {}
+    for v in result.verdicts:
+        key = f"{v.scenario}/{v.backend}/{v.mode}"
+        legs[key] = {
+            "ok": v.ok,
+            "liveness": v.liveness,
+            "safety": v.safety,
+            "quality": v.quality,
+            "n_violations": (v.sentinel or {}).get("n_violations", 0),
+            "unrecovered": int(v.detail.get("unrecovered", 0) or 0),
+        }
+        rows.append(Row(
+            name=f"chaos_{v.scenario}_{v.backend}_{v.mode}",
+            us_per_call=us_per_leg,
+            derived=1.0 if v.ok else 0.0,
+            extra="" if v.ok else "FAILED",
+        ))
+    emit(rows, header="chaos campaign verdicts (1.0 = leg ok)")
+    emit_json("chaos", {
+        "fast": fast,
+        "ok": payload["ok"],
+        "n_legs": payload["n_legs"],
+        "n_failed": payload["n_failed"],
+        "sentinel_violations": payload["sentinel_violations"],
+        "unrecovered_faults": payload["unrecovered_faults"],
+        "wall_seconds": payload["wall_seconds"],
+        "legs": legs,
+    })
+
+    failures = result.failures()
+    if failures:
+        for v in failures:
+            print(f"chaos FAILED: {v.scenario}/{v.backend}/{v.mode} "
+                  f"liveness={v.liveness} safety={v.safety} "
+                  f"quality={v.quality} detail={v.detail}")
+        raise SystemExit(
+            f"chaos campaign: {len(failures)}/{len(result.verdicts)} legs failed"
+        )
+    print(f"# chaos campaign clean: {len(result.verdicts)} legs, "
+          f"0 sentinel violations, 0 unrecovered replay faults")
+
+
+if __name__ == "__main__":
+    run()

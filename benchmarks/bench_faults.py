@@ -50,6 +50,12 @@ SCHEDULES = {
                             shrink_at_call=20, shrink_bytes=64 * MB),
     "caching": FaultSchedule(seed=0, create_fail_prob=0.5, burst=2,
                              shrink_at_call=3, shrink_bytes=64 * MB),
+    # ellm / hybrid sit on gmlake-style 2 MB chunking, so they share its
+    # device-call granularity and calibrated schedule shape.
+    "ellm": FaultSchedule(seed=3, create_fail_prob=0.1, burst=2,
+                          shrink_at_call=20, shrink_bytes=64 * MB),
+    "hybrid": FaultSchedule(seed=3, create_fail_prob=0.1, burst=2,
+                            shrink_at_call=20, shrink_bytes=64 * MB),
 }
 
 

@@ -47,6 +47,16 @@ load-sensitive, so they exist to *name* the hot term that moved, not to
 block. A baseline predating the ``core`` field keeps the whole tier
 warn-only (no blocking on incomparable schemas).
 
+A fourth, **chaos** tier compares campaign verdicts from
+``BENCH_chaos.json`` files (see ``benchmarks/bench_chaos.py``) when both
+``--chaos-baseline`` and ``--chaos-candidate`` are given. Verdicts are
+deterministic functions of the seeded scenario set, so the rules are
+absolute: a ``scenario/backend/mode`` leg whose verdict was ok must stay
+ok, and sentinel-violation / unrecovered-replay-fault counters that were
+zero must stay zero, per leg and in aggregate — any flip **blocks**
+(subject to ``--annotate-only``). New legs pass freely; disappeared legs
+warn.
+
 Exit codes: 0 = no regression (or --annotate-only), 1 = at least one
 trace x allocator pair regressed on any blocking tier, or the
 candidate file itself is unreadable (a defect in this very run, never
@@ -281,6 +291,71 @@ def compare_serving(baseline: dict, candidate: dict, model_threshold: float):
     return regressions, warnings
 
 
+def compare_chaos(baseline: dict, candidate: dict):
+    """Diff two BENCH_chaos.json payloads (see bench_chaos).
+
+    Campaign verdicts are deterministic functions of the seeded scenario
+    set, so the rules are absolute, not thresholded: a leg whose verdict
+    was ok must stay ok, and sentinel-violation / unrecovered-fault
+    counters that were zero must stay zero (per leg and in aggregate).
+    New legs (new scenarios or backends) pass freely; a leg that
+    disappears only warns (a renamed scenario is not a regression)."""
+    regressions, warnings = [], []
+    base_legs = baseline.get("legs", {}) or {}
+    cand_legs = candidate.get("legs", {}) or {}
+    for key, old in sorted(base_legs.items()):
+        new = cand_legs.get(key)
+        if new is None:
+            warnings.append(f"chaos/{key}: leg disappeared (scenario set "
+                            f"changed?)")
+            continue
+        if old.get("ok") and not new.get("ok"):
+            regressions.append(
+                f"chaos/{key}: verdict ok -> FAILED (liveness="
+                f"{new.get('liveness')} safety={new.get('safety')} "
+                f"quality={new.get('quality')})"
+            )
+        for metric in ("n_violations", "unrecovered"):
+            ov = old.get(metric, 0) or 0
+            nv = new.get(metric, 0) or 0
+            if ov == 0 and nv > 0:
+                regressions.append(f"chaos/{key}/{metric}: 0 -> {nv}")
+    for metric in ("sentinel_violations", "unrecovered_faults"):
+        ov = baseline.get(metric, 0) or 0
+        nv = candidate.get(metric, 0) or 0
+        if ov == 0 and nv > 0:
+            regressions.append(f"chaos/{metric}: 0 -> {nv}")
+    return regressions, warnings
+
+
+def _chaos_tier(chaos_baseline, chaos_candidate, annotate_only) -> int:
+    """Run the chaos campaign-verdict tier. Returns the number of
+    blocking regressions (0 under --annotate-only or no usable baseline)."""
+    try:
+        with open(chaos_baseline) as f:
+            base = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::warning::chaos verdict diff skipped (no usable baseline): {e}")
+        return 0
+    try:
+        with open(chaos_candidate) as f:
+            cand = json.load(f)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"::error::chaos verdict candidate unreadable: {e}")
+        return 1
+    regressions, warns = compare_chaos(base, cand)
+    for w in warns:
+        print(f"::warning::{w}")
+    level = "warning" if annotate_only else "error"
+    for r in regressions:
+        print(f"::{level}::chaos verdict regression {r}")
+    if not regressions:
+        print(f"chaos verdicts: {len(cand.get('legs', {}))} legs, no "
+              f"ok->FAILED flips, no new sentinel violations or "
+              f"unrecovered faults")
+    return 0 if annotate_only else len(regressions)
+
+
 def _serving_tier(serving_baseline, serving_candidate, model_threshold,
                   annotate_only) -> int:
     """Run the serving TTFT/TPOT tier. Returns the number of blocking
@@ -353,6 +428,14 @@ def main(argv=None) -> int:
         "--serving-candidate", default=None,
         help="this run's BENCH_serving.json (modeled TTFT/TPOT tier)",
     )
+    ap.add_argument(
+        "--chaos-baseline", default=None,
+        help="previous run's BENCH_chaos.json (campaign-verdict tier)",
+    )
+    ap.add_argument(
+        "--chaos-candidate", default=None,
+        help="this run's BENCH_chaos.json (campaign-verdict tier)",
+    )
     args = ap.parse_args(argv)
 
     profile_regressions = 0
@@ -369,13 +452,20 @@ def main(argv=None) -> int:
             args.model_threshold, args.annotate_only,
         )
 
+    chaos_regressions = 0
+    if args.chaos_baseline and args.chaos_candidate:
+        chaos_regressions = _chaos_tier(
+            args.chaos_baseline, args.chaos_candidate, args.annotate_only,
+        )
+
     try:  # a missing/unreadable *baseline* must never block the build
         with open(args.baseline) as f:
             baseline = json.load(f)
         _rows(baseline)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"::warning::replay perf diff skipped (no usable baseline): {e}")
-        return 1 if (serving_regressions or profile_regressions) else 0
+        return 1 if (serving_regressions or profile_regressions
+                     or chaos_regressions) else 0
     try:  # an unreadable *candidate* is a real defect in this very run
         with open(args.candidate) as f:
             candidate = json.load(f)
@@ -411,6 +501,7 @@ def main(argv=None) -> int:
         (regressions and not args.annotate_only)
         or serving_regressions
         or profile_regressions
+        or chaos_regressions
     )
     return 1 if blocking else 0
 

@@ -60,6 +60,7 @@ def main() -> None:
 
     from . import (
         bench_alloc_latency,
+        bench_chaos,
         bench_end2end,
         bench_faults,
         bench_platforms,
@@ -82,6 +83,7 @@ def main() -> None:
         "serving": bench_serving,
         "replay": bench_replay_throughput,
         "faults": bench_faults,
+        "chaos": bench_chaos,
         "profile": bench_profile,
         "roofline": roofline_all,
     }

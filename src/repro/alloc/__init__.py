@@ -41,14 +41,18 @@ from .chunks import (
     DEFAULT_FRAG_LIMIT,
     GB,
     MB,
+    PREEMPTION_TRACE_FORMAT,
     SMALL_ALLOC_LIMIT,
     DeviceOOM,
     Extent,
     FaultInjector,
     FaultSchedule,
+    FaultWindow,
+    PreemptionEvent,
     TransientDeviceError,
     VMMCostLedger,
     VMMDevice,
+    load_preemption_trace,
     num_chunks,
     pack_extent_runs,
     pack_extents,
@@ -71,6 +75,7 @@ from .caching_allocator import (
     AllocatorOOM,
     CachingAllocator,
     NativeAllocator,
+    QuotaDenied,
 )
 from .gmlake import GMLakeAllocator, PBlock, SBlock
 from .stalloc import PlacementPlan, PlannedBlock, STAllocAllocator, build_plan
@@ -88,6 +93,10 @@ __all__ = [
     "Extent",
     "FaultInjector",
     "FaultSchedule",
+    "FaultWindow",
+    "PreemptionEvent",
+    "PREEMPTION_TRACE_FORMAT",
+    "load_preemption_trace",
     "TransientDeviceError",
     "VMMCostLedger",
     "VMMDevice",
@@ -109,6 +118,7 @@ __all__ = [
     "AllocatorOOM",
     "CachingAllocator",
     "NativeAllocator",
+    "QuotaDenied",
     "GMLakeAllocator",
     "PBlock",
     "SBlock",

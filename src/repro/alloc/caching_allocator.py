@@ -45,6 +45,17 @@ class AllocatorOOM(MemoryError):
     """
 
 
+class QuotaDenied(AllocatorOOM):
+    """A tenant-local quota denial (ellm per-tenant arena quotas).
+
+    Subclasses ``AllocatorOOM`` so generic admission control defers the
+    request, but callers that distinguish it can react correctly: the
+    denial is deterministic for the denied tenant and says nothing about
+    device pressure — evicting or backpressuring *other* tenants cannot
+    fix it, and retrying without a budget livelocks.
+    """
+
+
 @dataclass
 class Segment:
     """One cudaMalloc'd region carved into blocks."""

@@ -18,11 +18,12 @@ microbenchmarks on hardware that has no CUDA driver.
 from __future__ import annotations
 
 import itertools
+import json
 import math
 import random
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 try:  # the array fast paths need numpy; the scalar paths must not
     import numpy as np
@@ -460,6 +461,109 @@ class VMMDevice:
 
 
 @dataclass(frozen=True)
+class FaultWindow:
+    """A bounded interval of elevated fault pressure.
+
+    Windows are indexed in 1-based alloc-side device calls (the same clock
+    as ``shrink_at_call``) and cover ``[start_call, start_call + duration)``.
+    While a window is active its probabilities *override* the schedule's
+    base rates wherever they are higher (``max`` composition), so several
+    overlapping windows model correlated storms without double-drawing.
+    """
+
+    start_call: int
+    duration: int
+    create_fail_prob: float = 0.0
+    map_fail_prob: float = 0.0
+    release_fail_prob: float = 0.0
+    slow_prob: float = 0.0
+
+    def active_at(self, call: int) -> bool:
+        return self.start_call <= call < self.start_call + self.duration
+
+
+@dataclass(frozen=True)
+class PreemptionEvent:
+    """One row of the checked-in preemption-trace format.
+
+    ``at`` is the event time in alloc-side device calls (1-based, the
+    injector's deterministic clock); ``severity`` is a kind-specific
+    magnitude in [0, 1]; ``duration`` is the event's window length in
+    calls. Kinds:
+
+      * ``revocation``    — spot-style instance revocation: a warning
+        brownout window ``lead`` calls ahead of ``at`` (checkpoint
+        pressure), then a capacity loss of ``severity x capacity`` plus a
+        deterministic transient burst over the revocation window;
+      * ``capacity_loss`` — plain shrink of ``severity x capacity`` (a
+        cluster of these close together is a correlated loss storm);
+      * ``transient``     — flurry window: elevated transient-failure
+        probability (create/map/release sides) of ``severity``;
+      * ``brownout``      — slow-device window: slow-call probability of
+        ``severity``, no failures.
+    """
+
+    at: int
+    kind: str
+    severity: float
+    duration: int = 1
+    #: warning lead time (calls) before a revocation; ignored elsewhere
+    lead: int = 0
+
+    KINDS = ("revocation", "capacity_loss", "transient", "brownout")
+
+    def __post_init__(self) -> None:
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"unknown preemption event kind {self.kind!r}; "
+                f"expected one of {self.KINDS}"
+            )
+        if self.at < 1 or self.duration < 1:
+            raise ValueError(f"bad preemption event timing ({self.at}, {self.duration})")
+        if not 0.0 <= self.severity <= 1.0:
+            raise ValueError(f"severity must be in [0, 1], got {self.severity}")
+
+
+#: the checked-in preemption trace format tag (see tests/data/)
+PREEMPTION_TRACE_FORMAT = "repro.preemption.v1"
+
+
+def load_preemption_trace(source) -> List[PreemptionEvent]:
+    """Parse a ``repro.preemption.v1`` trace into ``PreemptionEvent`` rows.
+
+    ``source`` is a path to a JSON file, an already-parsed payload dict,
+    or a bare event list (dicts or ``PreemptionEvent`` instances pass
+    through). The format is deliberately tiny — event time, kind,
+    severity, duration — so real spot-market / maintenance preemption
+    logs reduce to it with a one-line converter.
+    """
+    if isinstance(source, (str,)) or hasattr(source, "read_text"):
+        with open(source) as f:
+            source = json.load(f)
+    if isinstance(source, dict):
+        fmt = source.get("format")
+        if fmt != PREEMPTION_TRACE_FORMAT:
+            raise ValueError(
+                f"unknown preemption trace format {fmt!r}; "
+                f"expected {PREEMPTION_TRACE_FORMAT!r}"
+            )
+        source = source["events"]
+    out: List[PreemptionEvent] = []
+    for ev in source:
+        if isinstance(ev, PreemptionEvent):
+            out.append(ev)
+        else:
+            out.append(PreemptionEvent(
+                at=int(ev["at"]),
+                kind=str(ev["kind"]),
+                severity=float(ev["severity"]),
+                duration=int(ev.get("duration", 1)),
+                lead=int(ev.get("lead", 0)),
+            ))
+    return sorted(out, key=lambda e: (e.at, e.kind))
+
+
+@dataclass(frozen=True)
 class FaultSchedule:
     """Deterministic fault plan for a :class:`FaultInjector`.
 
@@ -497,6 +601,96 @@ class FaultSchedule:
     #: supervisor-restore path (the kill/recover scenario)
     fail_at_call: Optional[int] = None
     fail_burst: int = 0
+    #: per-call probability that a release-side API (``cuMemRelease`` /
+    #: ``cuMemUnmap``) faults transiently. Release-side faults are always
+    #: *absorbed* at the injector (bounded retries, each charged as
+    #: ``faultStall``) — free/drain paths are fire-and-forget in every
+    #: backend, so an exception there would corrupt allocator state
+    #: instead of exercising recovery. The counters/ledger still record
+    #: every fault, which is what the chaos verdicts assert on.
+    release_fail_prob: float = 0.0
+    #: stall-charged retries per release-side fault before the injector
+    #: gives up stalling and lets the call complete
+    release_retry_limit: int = 4
+    #: additional capacity losses beyond ``shrink_at_call``:
+    #: ``((call, bytes), ...)`` — multi-event chaos schedules need more
+    #: than the legacy one-shot knob
+    shrinks: Tuple[Tuple[int, int], ...] = ()
+    #: additional deterministic failure bursts: ``((call, n), ...)``
+    bursts_at: Tuple[Tuple[int, int], ...] = ()
+    #: bounded windows of elevated fault pressure (see ``FaultWindow``)
+    windows: Tuple[FaultWindow, ...] = ()
+
+    # -- preemption-trace synthesis ----------------------------------------
+    #: from_preemption_trace: transient-burst length per unit severity of a
+    #: revocation (sized so severity ~0.5 exceeds one ladder's retry budget)
+    REVOCATION_BURST_SCALE = 24
+    #: warning-window slow probability per unit severity
+    WARNING_SLOW_PROB = 0.5
+
+    @classmethod
+    def from_preemption_trace(
+        cls,
+        events: Union[str, Sequence],
+        *,
+        capacity_bytes: int,
+        seed: int = 0,
+        **overrides,
+    ) -> "FaultSchedule":
+        """Synthesize a multi-event schedule from a preemption trace.
+
+        ``events`` is anything ``load_preemption_trace`` accepts (a path
+        to a checked-in ``repro.preemption.v1`` file, a payload dict, or
+        an event list). ``capacity_bytes`` scales each event's severity
+        into a concrete byte loss; chunk-quantization happens in
+        ``VMMDevice.shrink``. The synthesis is pure — the same trace,
+        seed and capacity always yield the same (hashable, frozen)
+        schedule — so chaos campaigns are replayable end to end.
+        """
+        evs = load_preemption_trace(events)
+        shrinks: List[Tuple[int, int]] = []
+        bursts: List[Tuple[int, int]] = []
+        windows: List[FaultWindow] = []
+        for ev in evs:
+            if ev.kind == "revocation":
+                if ev.lead > 0:
+                    # the warning: a pre-revocation brownout (checkpoint
+                    # pressure in a real fleet shows up as device stalls)
+                    start = max(1, ev.at - ev.lead)
+                    windows.append(FaultWindow(
+                        start_call=start, duration=ev.at - start,
+                        slow_prob=cls.WARNING_SLOW_PROB * ev.severity,
+                    ))
+                shrinks.append((ev.at, int(ev.severity * capacity_bytes)))
+                bursts.append(
+                    (ev.at, max(1, int(ev.severity * cls.REVOCATION_BURST_SCALE)))
+                )
+                windows.append(FaultWindow(
+                    start_call=ev.at, duration=ev.duration,
+                    create_fail_prob=min(1.0, 0.5 * ev.severity),
+                ))
+            elif ev.kind == "capacity_loss":
+                shrinks.append((ev.at, int(ev.severity * capacity_bytes)))
+            elif ev.kind == "transient":
+                windows.append(FaultWindow(
+                    start_call=ev.at, duration=ev.duration,
+                    create_fail_prob=ev.severity,
+                    map_fail_prob=0.5 * ev.severity,
+                    release_fail_prob=0.5 * ev.severity,
+                ))
+            else:  # brownout
+                windows.append(FaultWindow(
+                    start_call=ev.at, duration=ev.duration,
+                    slow_prob=ev.severity,
+                ))
+        kw = dict(
+            seed=seed,
+            shrinks=tuple(shrinks),
+            bursts_at=tuple(bursts),
+            windows=tuple(windows),
+        )
+        kw.update(overrides)
+        return cls(**kw)
 
 
 class FaultInjector:
@@ -508,13 +702,21 @@ class FaultInjector:
 
       * alloc-side APIs (``cu_malloc``, ``cu_mem_create``) raise
         :class:`TransientDeviceError` per the probability/burst schedule,
-        and fire the scheduled capacity shrink;
+        and fire the scheduled capacity shrinks (the legacy one-shot knobs
+        plus any ``shrinks``/``bursts_at``/``windows`` multi-event rows);
       * ``cu_mem_map`` faults are absorbed by a bounded driver-level retry
         loop, each absorbed fault charged to the ledger as ``faultStall``.
         Retrying at the injector (not the backend) keeps mid-stitch /
         mid-split map failures crash-consistent: GMLake mutates its
         registries before remapping, so a map error escaping there would
         corrupt allocator state rather than exercise recovery;
+      * release-side APIs (``cu_mem_release``, ``cu_mem_unmap``) fault per
+        ``release_fail_prob`` but are *always absorbed*: free and
+        deferred-unmap drains are fire-and-forget in every backend, so the
+        injector stalls (bounded by ``release_retry_limit``, charged as
+        ``faultStall``) and then lets the call complete. The fault
+        counters and ledger record every hit, which is how chaos verdicts
+        see the drain path exercised under failure;
       * ``vmm_alloc`` is transactional: if mapping fails past the retry
         limit after chunks were created, the chunks are released before the
         error propagates — the backend sees the fault at a safe point and
@@ -528,15 +730,59 @@ class FaultInjector:
 
     supports_fault_injection = True
 
-    def __init__(self, device: VMMDevice, schedule: FaultSchedule = FaultSchedule()):
+    def __init__(
+        self,
+        device: VMMDevice,
+        schedule: FaultSchedule = FaultSchedule(),
+        *,
+        external_clock: bool = False,
+    ):
         self.inner = device
         self.schedule = schedule
+        # external_clock: the fault clock is advanced by the driver (one
+        # ``tick()`` per *client* allocation) instead of per device call.
+        # Caching backends absorb almost every device call — a replayed
+        # workload can reach the device once for hundreds of client
+        # mallocs — so trace offsets authored in client-call time would
+        # otherwise never fire against them.
+        self.external_clock = external_clock
         self._rng = random.Random(schedule.seed)
         self._alloc_calls = 0
         self._burst_left = 0  # alloc-side burst in progress
         self._map_burst_left = 0
+        self._release_burst_left = 0
         self.fault_counts: Dict[str, int] = {}
         self.fault_events: List[dict] = []
+        # multi-event rows folded in with the legacy one-shot knobs; the
+        # dicts key on the 1-based alloc-side call counter
+        self._shrinks: Dict[int, int] = {
+            call: nbytes for call, nbytes in schedule.shrinks
+        }
+        if schedule.shrink_at_call is not None and schedule.shrink_bytes:
+            self._shrinks[schedule.shrink_at_call] = (
+                self._shrinks.get(schedule.shrink_at_call, 0)
+                + schedule.shrink_bytes
+            )
+        self._armed_bursts: Dict[int, int] = {
+            call: n for call, n in schedule.bursts_at
+        }
+        if schedule.fail_at_call is not None and schedule.fail_burst:
+            self._armed_bursts[schedule.fail_at_call] = max(
+                self._armed_bursts.get(schedule.fail_at_call, 0),
+                schedule.fail_burst,
+            )
+
+    # -- window composition ---------------------------------------------------
+    def _prob(self, field: str) -> float:
+        """Effective probability of ``field`` at the current alloc-side
+        call: the schedule's base rate, raised by any active window."""
+        p = getattr(self.schedule, field)
+        for w in self.schedule.windows:
+            if w.active_at(self._alloc_calls):
+                wp = getattr(w, field)
+                if wp > p:
+                    p = wp
+        return p
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
@@ -553,33 +799,50 @@ class FaultInjector:
 
     def _maybe_slow(self) -> None:
         s = self.schedule
-        if s.slow_prob and self._rng.random() < s.slow_prob:
+        p = self._prob("slow_prob")
+        if p and self._rng.random() < p:
             self.inner.ledger.charge("faultStall", s.slow_cost)
             self._note("slow")
 
+    def _advance_clock(self) -> None:
+        """One step of the fault clock: apply any shrink or burst arming
+        scheduled for the new call index. Never raises — clock-driven
+        events take effect on the device (shrink) or arm state consumed
+        by the next real device call (burst)."""
+        self._alloc_calls += 1
+        nbytes = self._shrinks.pop(self._alloc_calls, 0)
+        if nbytes:
+            pending = self.inner.shrink(nbytes)
+            self._note("shrink", bytes=nbytes, pending=pending)
+        armed = self._armed_bursts.pop(self._alloc_calls, 0)
+        if armed:
+            self._burst_left = armed
+            self._note("burst_armed", n=armed)
+
+    def tick(self) -> None:
+        """Advance the external fault clock by one client allocation.
+
+        Only meaningful with ``external_clock=True``: drivers that sit
+        above a caching backend call this once per client malloc, so
+        preemption-trace ``at`` offsets land in client-call time no
+        matter how few device calls the backend actually issues. A
+        burst armed here still strikes on the next genuine device call
+        — a backend that serves the burst window entirely from cache
+        legitimately never sees those faults."""
+        if self.external_clock:
+            self._advance_clock()
+
     def _alloc_side(self, api: str) -> None:
         s = self.schedule
-        self._alloc_calls += 1
-        if (
-            s.shrink_at_call is not None
-            and self._alloc_calls == s.shrink_at_call
-            and s.shrink_bytes
-        ):
-            pending = self.inner.shrink(s.shrink_bytes)
-            self._note("shrink", bytes=s.shrink_bytes, pending=pending)
-        if (
-            s.fail_at_call is not None
-            and self._alloc_calls == s.fail_at_call
-            and s.fail_burst
-        ):
-            self._burst_left = s.fail_burst
-            self._note("burst_armed", n=s.fail_burst)
+        if not self.external_clock:
+            self._advance_clock()
         self._maybe_slow()
         if self._burst_left:
             self._burst_left -= 1
             self._note("create_fault", api=api, burst=True)
             raise TransientDeviceError(f"injected transient {api} failure (burst)")
-        if s.create_fail_prob and self._rng.random() < s.create_fail_prob:
+        p = self._prob("create_fail_prob")
+        if p and self._rng.random() < p:
             self._burst_left = s.burst - 1
             self._note("create_fault", api=api, burst=False)
             raise TransientDeviceError(f"injected transient {api} failure")
@@ -600,7 +863,8 @@ class FaultInjector:
         if self._map_burst_left:
             self._map_burst_left -= 1
             return True
-        if s.map_fail_prob and self._rng.random() < s.map_fail_prob:
+        p = self._prob("map_fail_prob")
+        if p and self._rng.random() < p:
             self._map_burst_left = s.burst - 1
             return True
         return False
@@ -617,6 +881,61 @@ class FaultInjector:
         raise TransientDeviceError(
             f"injected cuMemMap failure persisted past {s.map_retry_limit} retries"
         )
+
+    # -- release-side injection ----------------------------------------------
+    def _release_fault(self) -> bool:
+        """One release-side draw; True = this call faults (is stalled)."""
+        if self._release_burst_left:
+            self._release_burst_left -= 1
+            return True
+        p = self._prob("release_fail_prob")
+        if p and self._rng.random() < p:
+            self._release_burst_left = self.schedule.burst - 1
+            return True
+        return False
+
+    def _release_side(self, api: str) -> None:
+        """Absorb release-side faults: stall (bounded), never fail.
+
+        Free and drain paths mutate backend registries *before* touching
+        the device, so an exception here would corrupt allocator state
+        rather than exercise recovery — and real streams retire unmaps
+        asynchronously, where a transient driver error degrades to a
+        stall, not a leak. The injector therefore charges each fault as a
+        ``faultStall`` and retries; past ``release_retry_limit`` it stops
+        stalling and completes the call, noting the exhaustion.
+        """
+        s = self.schedule
+        if not s.release_fail_prob and not self._release_burst_left:
+            has_window = any(
+                w.release_fail_prob for w in s.windows
+            )
+            if not has_window:
+                return  # fault-free fast path: zero draws, zero notes
+        for attempt in range(s.release_retry_limit + 1):
+            if not self._release_fault():
+                if attempt:
+                    self._note("release_retries_absorbed", api=api,
+                               retries=attempt)
+                return
+            self._note("release_fault", api=api)
+            self.inner.ledger.charge("faultStall", s.slow_cost)
+        self._note("release_fault_exhausted", api=api)
+
+    def cu_mem_release(self, chunks: Iterable[int]) -> None:
+        self._release_side("cuMemRelease")
+        return self.inner.cu_mem_release(chunks)
+
+    def cu_mem_unmap(self, n: int) -> None:
+        self._release_side("cuMemUnmap")
+        return self.inner.cu_mem_unmap(n)
+
+    def cu_free(self, size: int, *, synchronize: bool = True) -> None:
+        # segment-granularity release — the path every caching-family
+        # backend's release_cached walks; same absorb-and-stall contract
+        # as the VMM-level release primitives
+        self._release_side("cuFree")
+        return self.inner.cu_free(size, synchronize=synchronize)
 
     # -- composite helpers ----------------------------------------------------
     # Re-declared so they route through the injector's primitives; the base

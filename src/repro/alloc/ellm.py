@@ -36,7 +36,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from .caching_allocator import Allocation, AllocatorOOM
+from .caching_allocator import Allocation, AllocatorOOM, QuotaDenied
 from .chunks import CHUNK_SIZE, MB, DeviceOOM, VMMDevice, round_up
 from .gmlake import GMLakeAllocator
 from .metrics import AllocatorStats
@@ -48,12 +48,13 @@ from .registry import register
 class ElasticBlock:
     """One [offset, offset+size) placement inside the elastic weight arena."""
 
-    __slots__ = ("offset", "size", "held")
+    __slots__ = ("offset", "size", "held", "tenant")
 
-    def __init__(self, offset: int, size: int):
+    def __init__(self, offset: int, size: int, tenant: Optional[str] = None):
         self.offset = offset
         self.size = size
         self.held = True  # flipped by free; guards double-free
+        self.tenant = tenant  # quota attribution (None = unattributed)
 
     def __repr__(self):
         return f"ElasticBlock(off={self.offset}, size={self.size >> 20}MB)"
@@ -109,6 +110,7 @@ class ELLMAllocator:
         weight_threshold: int = WEIGHT_THRESHOLD,
         deflate_ratio: float = DEFLATE_RATIO,
         deflate_patience: int = DEFLATE_PATIENCE,
+        tenant_quota_bytes: Optional[int] = None,
     ):
         if slab_bytes % CHUNK_SIZE:
             raise ValueError("slab_bytes must be a multiple of CHUNK_SIZE")
@@ -133,18 +135,43 @@ class ELLMAllocator:
         self._arena_reserved = 0
         self._arena_live = 0
         self._deflate_streak = 0
+        # per-tenant arena quotas (multi-tenant isolation): while a tenant
+        # context is set, its live arena bytes may not exceed the quota —
+        # the over-quota request fails as AllocatorOOM (admission control
+        # defers the *bursting* tenant) instead of inflating the shared
+        # arena and starving everyone else's slabs. None = quotas off,
+        # which keeps single-tenant behaviour (and digests) bit-identical.
+        self.tenant_quota_bytes = tenant_quota_bytes
+        self._tenant: Optional[str] = None
+        self._tenant_arena_live: Dict[str, int] = {}
+        # pressure bypass valve: set when a core-side OOM had to reclaim
+        # arena slabs — from then on weight-class requests route through
+        # the stitching core (which can assemble scattered chunks) so the
+        # arena drains instead of re-pinning its watermark with fresh
+        # placements. Cleared, with the arena released wholesale, when the
+        # last elastic block frees. Only ever set on an OOM path, so
+        # fault-free digests are untouched.
+        self._pressure_bypass = False
+        # slab indices inside the arena extent given back to the device
+        # while the valve is open (interior holes). Only ever populated
+        # during bypass — no new placement can land in a hole before the
+        # drain completes and resets the arena.
+        self._hole_slabs: set = set()
         self.elastic_counters: Dict[str, int] = {
             "inflate": 0,
             "inflated_bytes": 0,
             "deflate": 0,
             "deflated_bytes": 0,
             "spill": 0,
+            "quota_denied": 0,
+            "bypass": 0,
         }
 
     # -- accounting -----------------------------------------------------------
     @property
     def reserved_bytes(self) -> int:
-        return self._arena_reserved + self.core.reserved_bytes
+        holes = len(self._hole_slabs) * self.slab_bytes
+        return self._arena_reserved - holes + self.core.reserved_bytes
 
     @property
     def state_counts(self) -> Dict[str, int]:
@@ -161,6 +188,26 @@ class ELLMAllocator:
     def release_cached(self) -> int:
         """Trailing free slabs of the arena + whatever the core can drop."""
         return self._release_trailing_slabs() + self.core.release_cached()
+
+    # -- tenant attribution ---------------------------------------------------
+    def set_tenant(self, tenant: Optional[str] = None) -> None:
+        """Set (or clear) the tenant context for subsequent arena mallocs.
+
+        Serving integrations call this around each request's allocations;
+        trace replays never do, so the quota layer is invisible there.
+        """
+        self._tenant = tenant or None
+
+    @property
+    def tenant_arena_bytes(self) -> Dict[str, int]:
+        """Live arena bytes per attributed tenant (diagnostics)."""
+        return {t: b for t, b in sorted(self._tenant_arena_live.items()) if b}
+
+    def _quota_admits(self, rsize: int) -> bool:
+        if self.tenant_quota_bytes is None or self._tenant is None:
+            return True
+        used = self._tenant_arena_live.get(self._tenant, 0)
+        return used + rsize <= self.tenant_quota_bytes
 
     # -- elastic arena placement ----------------------------------------------
     def _span_alloc(self, size: int) -> Optional[int]:
@@ -237,16 +284,57 @@ class ELLMAllocator:
         return True
 
     def _release_trailing_slabs(self) -> int:
-        """Deflate: return every whole free slab above the live watermark."""
+        """Deflate: return every whole free slab above the live watermark.
+
+        Hole slabs in the trailing region were already given back to the
+        device (bypass-mode interior release), so they shrink the extent
+        without a second ``cu_free``."""
         keep = round_up(self._top, self.slab_bytes) if self._top else 0
-        excess = self._arena_reserved - keep
+        holes_above = {
+            i for i in self._hole_slabs if i * self.slab_bytes >= keep
+        }
+        excess = (
+            self._arena_reserved - keep - len(holes_above) * self.slab_bytes
+        )
         if excess <= 0:
+            if holes_above:
+                self._hole_slabs -= holes_above
+                self._arena_reserved = keep
             return 0
         self.device.cu_free(excess, synchronize=False)
+        self._hole_slabs -= holes_above
         self._arena_reserved = keep
         self.elastic_counters["deflate"] += 1
         self.elastic_counters["deflated_bytes"] += excess
         return excess
+
+    def _release_free_slabs(self) -> int:
+        """Bypass-only interior deflate: give back every whole free slab
+        *inside* the arena extent, not just the trailing ones.
+
+        Safe only while the valve is open — no new placement can be
+        handed out from the arena, so a hole can never be written to
+        before the drain completes and the arena resets. This is what
+        unsticks a high watermark pinned by one long-lived block: the
+        free slabs below it return to the device for the stitching core
+        to reuse."""
+        assert self._pressure_bypass, "interior release outside bypass"
+        slab = self.slab_bytes
+        new = set()
+        for off, sz in self._spans:
+            first = (off + slab - 1) // slab
+            last = (off + sz) // slab  # exclusive: whole slabs only
+            for i in range(first, last):
+                if i not in self._hole_slabs:
+                    new.add(i)
+        if not new:
+            return 0
+        freed = len(new) * slab
+        self.device.cu_free(freed, synchronize=False)
+        self._hole_slabs |= new
+        self.elastic_counters["deflate"] += 1
+        self.elastic_counters["deflated_bytes"] += freed
+        return freed
 
     def _deflate_tick(self) -> None:
         """Governor: sustained low utilization releases trailing slabs."""
@@ -260,12 +348,24 @@ class ELLMAllocator:
 
     # -- allocation -----------------------------------------------------------
     def malloc(self, size: int) -> Allocation:
-        if size >= self.weight_threshold:
+        if size >= self.weight_threshold and not self._pressure_bypass:
             return self._malloc_elastic(size)
         return self._core_malloc(size)
 
     def _malloc_elastic(self, size: int) -> Allocation:
         rsize = round_up(size, CHUNK_SIZE)
+        if not self._quota_admits(rsize):
+            # isolation: the bursting tenant is the one denied; everyone
+            # else's slabs (and the shared core) are untouched. QuotaDenied
+            # (an AllocatorOOM) lets admission control defer the request
+            # while telling eviction/retry logic the denial is tenant-local
+            # and deterministic — device-side recovery cannot fix it.
+            self.elastic_counters["quota_denied"] += 1
+            raise QuotaDenied(
+                f"ellm tenant quota: {self._tenant!r} at "
+                f"{self._tenant_arena_live.get(self._tenant, 0)} of "
+                f"{self.tenant_quota_bytes} arena bytes, wants {rsize} more"
+            )
         off = self._span_alloc(rsize)
         if off is None:
             need = round_up(
@@ -281,14 +381,40 @@ class ELLMAllocator:
                 self.elastic_counters["spill"] += 1
                 return self._core_malloc(size)
         self._arena_live += rsize
+        tenant = self._tenant
+        if tenant is not None:
+            self._tenant_arena_live[tenant] = (
+                self._tenant_arena_live.get(tenant, 0) + rsize
+            )
         self.stats.on_alloc(rsize, self.reserved_bytes)
         return Allocation(
-            req_size=size, block_size=rsize, block=ElasticBlock(off, rsize),
-            owner=self,
+            req_size=size, block_size=rsize,
+            block=ElasticBlock(off, rsize, tenant), owner=self,
         )
 
     def _core_malloc(self, size: int) -> Allocation:
-        alloc = self.core.malloc(size)  # raises AllocatorOOM, never DeviceOOM
+        try:
+            alloc = self.core.malloc(size)  # AllocatorOOM, never DeviceOOM
+        except AllocatorOOM:
+            # cross-component reclaim: the core's recovery ladder cannot
+            # see the arena, so a KV-side OOM with free slabs parked above
+            # the arena watermark would fail while memory sits idle.
+            # Force-deflate the trailing slabs and open the pressure
+            # bypass valve (the arena drains instead of ratcheting), then
+            # retry once; fault-free runs never reach this branch, so
+            # digests are untouched.
+            if not self._pressure_bypass and (
+                self._arena_reserved or self._arena_live
+            ):
+                self._pressure_bypass = True
+                self.elastic_counters["bypass"] += 1
+            freed = self._release_trailing_slabs()
+            if self._pressure_bypass:
+                freed += self._release_free_slabs()
+            if not freed:
+                raise
+            self.event_log.append("reclaim.deflate_arena", size=freed)
+            alloc = self.core.malloc(size)
         alloc.owner = self
         # the core already counted itself; ours is the published stats
         self.stats.on_alloc(alloc.block_size, self.reserved_bytes)
@@ -301,6 +427,14 @@ class ELLMAllocator:
             block.held = False
             self._span_free(block.offset, block.size)
             self._arena_live -= block.size
+            if block.tenant is not None:
+                self._tenant_arena_live[block.tenant] -= block.size
+            if self._pressure_bypass and self._arena_live == 0:
+                # drained under pressure: give the whole arena back (the
+                # watermark retracted to zero with the last free) and
+                # resume elastic placement from a clean slate
+                self._release_trailing_slabs()
+                self._pressure_bypass = False
         else:
             self.core.free(alloc)
         self._deflate_tick()
@@ -308,9 +442,17 @@ class ELLMAllocator:
 
     # -- debug / test support -------------------------------------------------
     def check_invariants(self) -> None:
-        assert 0 <= self._arena_live <= self._arena_reserved
+        holes = len(self._hole_slabs) * self.slab_bytes
+        assert 0 <= self._arena_live <= self._arena_reserved - holes
         assert self._arena_reserved % self.slab_bytes == 0
         assert self._top <= self._arena_reserved
+        assert not self._hole_slabs or self._pressure_bypass, (
+            "interior holes outside pressure bypass"
+        )
+        assert all(
+            0 <= i * self.slab_bytes < self._arena_reserved
+            for i in self._hole_slabs
+        )
         prev_end = 0
         span_bytes = 0
         for off, sz in self._spans:
@@ -320,6 +462,11 @@ class ELLMAllocator:
         assert prev_end <= self._top
         assert span_bytes + self._arena_live == self._top, (
             "arena accounting leak: spans + live != watermark"
+        )
+        for tenant, used in self._tenant_arena_live.items():
+            assert used >= 0, f"negative arena attribution for {tenant!r}"
+        assert sum(self._tenant_arena_live.values()) <= self._arena_live, (
+            "tenant attribution exceeds live arena bytes"
         )
         self.core.check_invariants()
 

@@ -2081,9 +2081,17 @@ class GMLakeAllocator:
         return refs
 
     def _take_all(
-        self, include_sub: bool
+        self, include_sub: bool, activate: bool = True
     ) -> Tuple[Dict[int, _Seg], int, Dict['SBlock', int], List[PBlock]]:
-        """Drain the stitchable pool(s) for S4."""
+        """Drain the stitchable pool(s) for S4.
+
+        ``activate`` applies the handout-side membership refcount bump —
+        correct when the taken members are about to be stitched into a
+        live block (S4). The recovery ladder's physical-reclaim rung takes
+        the pools only to *destroy* the members; it must pass ``False`` or
+        the referencing sBlocks' activity counters drift above the truth
+        (the members never actually become active).
+        """
         pool_main = self._inactive_p.main
         pools = (pool_main, self._inactive_p.sub) if include_sub else (pool_main,)
         plan: Dict[int, _Seg] = {}
@@ -2108,7 +2116,8 @@ class GMLakeAllocator:
             pool.bytes = 0
         if vec:
             refs = self._count_segs_refs(list(plan.values()))
-        self._apply_activation(refs)
+        if activate:
+            self._apply_activation(refs)
         return plan, total, refs, members
 
 
@@ -2323,7 +2332,7 @@ class GMLakeAllocator:
         """
         self._evict_stitchfree()
         self.drain_deferred_unmaps()
-        plan, total, refs, members = self._take_all(True)
+        plan, total, refs, members = self._take_all(True, activate=False)
         del plan, total, refs  # handout bookkeeping; the blocks are doomed
         freed = 0
         for p in members:

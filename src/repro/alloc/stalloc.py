@@ -795,7 +795,7 @@ class STAllocAllocator:
         self.plan = plan
         self.granularity = granularity
         self._cursor = 0  # arrival index of the next planned request
-        self._plan_reserved = 0  # plan.capacity once the arena is reserved
+        self._plan_reserved = 0  # chunk-rounded plan.capacity once reserved
         self._arena: Optional[_PlanArena] = None
         self._draining: List[_PlanArena] = []  # retired arenas, live > 0
         self._draining_bytes = 0  # cached sum of draining reservations
@@ -923,8 +923,13 @@ class STAllocAllocator:
                     f"{self.name} plan needs {cap} bytes upfront "
                     f"(device_free={self.device.free_bytes})"
                 ) from e
-        self._plan_reserved = self.plan.capacity
-        self._arena = _PlanArena(self.plan.capacity)
+        # the device rounds cu_malloc up to its chunk granularity, so the
+        # published reservation must too — otherwise ``reserved_bytes``
+        # undercounts device ``used_bytes`` by up to a chunk and the
+        # drain agreement (device used == backend reserved) breaks
+        reserved = round_up(self.plan.capacity, self.device.chunk_size)
+        self._plan_reserved = reserved
+        self._arena = _PlanArena(reserved)
 
     def _replan_to_fit(self) -> int:
         """Recovery rung: re-plan to the device's current free capacity.
@@ -1042,7 +1047,9 @@ class STAllocAllocator:
     def check_invariants(self) -> None:
         if self.plan is not None:
             assert self._cursor <= self.plan.n_requests
-            assert self._plan_reserved in (0, self.plan.capacity)
+            assert self._plan_reserved in (
+                0, round_up(self.plan.capacity, self.device.chunk_size)
+            )
         else:
             assert self._cursor == 0 and self._plan_reserved == 0
         drain_total = 0

@@ -73,10 +73,17 @@ class KillRecoverConfig:
         the device at different granularities: gmlake creates one pBlock
         per 2 MB KV grow (ramp = 18 creates, growth creates follow), while
         caching reserves whole 20 MB segments (ramp = 2 reservations, the
-        3rd/4th land mid-trace). Both defaults put the fault on a growth
-        allocation around decode step 15, after several checkpoints.
+        3rd/4th land mid-trace). ellm and hybrid sit on gmlake-style 2 MB
+        chunking, so they share its fault point. All defaults put the
+        fault on a growth allocation around decode step 15, after several
+        checkpoints.
         """
-        tuned = {"gmlake": dict(fault_call=25), "caching": dict(fault_call=4)}
+        tuned = {
+            "gmlake": dict(fault_call=25),
+            "caching": dict(fault_call=4),
+            "ellm": dict(fault_call=25),
+            "hybrid": dict(fault_call=25),
+        }
         kw = dict(tuned.get(backend, {}), backend=backend, **overrides)
         return cls(**kw)
 

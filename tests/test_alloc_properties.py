@@ -35,6 +35,9 @@ from repro.alloc import (
     GB,
     MB,
     AllocatorOOM,
+    FaultInjector,
+    FaultSchedule,
+    FaultWindow,
     VMMDevice,
     registry,
 )
@@ -160,6 +163,112 @@ class TestHybridFuzz(_Fuzz):
 def test_every_backend_is_fuzzed():
     """A new backend registration must join the property layer."""
     fuzzed = {c.backend for c in _Fuzz.__subclasses__()}
+    assert fuzzed == set(registry.names())
+
+
+# ---------------------------------------------------------------------------
+# fault-aware property layer: the same interleavings under injected faults
+# ---------------------------------------------------------------------------
+
+
+def _fault_schedule(seed: int) -> FaultSchedule:
+    """Seed-derived multi-window fault schedule: a low base transient rate
+    plus 1-3 windows of elevated create/map/release failure probability,
+    landing inside the 60-op program's alloc-call range."""
+    rng = random.Random(seed ^ 0xFA17)
+    windows = []
+    for _ in range(rng.randint(1, 3)):
+        windows.append(FaultWindow(
+            start_call=rng.randint(1, 60),
+            duration=rng.randint(4, 16),
+            create_fail_prob=rng.choice((0.0, 0.2, 0.4)),
+            map_fail_prob=rng.choice((0.0, 0.2)),
+            release_fail_prob=rng.choice((0.0, 0.3)),
+        ))
+    return FaultSchedule(
+        seed=seed & 0xFFFF,
+        create_fail_prob=0.02,
+        burst=rng.choice((1, 2)),
+        windows=tuple(windows),
+    )
+
+
+class _FaultFuzz:
+    """The ``_Fuzz`` programs re-run over a fault-injected device.
+
+    Deliberately NOT a ``_Fuzz`` subclass: the fault family derives its
+    own schedule per seed and has its own coverage gate below, while
+    ``test_every_backend_is_fuzzed`` keys off ``_Fuzz.__subclasses__()``.
+
+    Mid-fault ladder contract, asserted after *every* op while windows
+    are live: a raw ``DeviceOOM`` (transient or not) never escapes a
+    backend, active never exceeds reserved, ``check_invariants`` holds
+    at sampled points, and the drain agreement survives absorbed
+    release-side faults (frees are fire-and-forget; a release fault must
+    stall, never leak).
+    """
+
+    backend = None
+    kwargs = {}
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=100, deadline=None)
+    def test_faulted_interleaving_upholds_contract(self, seed):
+        ops = _program(seed)
+        device = FaultInjector(VMMDevice(CAPACITY), _fault_schedule(seed))
+        alloc = registry.create(self.backend, device, **self.kwargs)
+        live = []
+        for i, (op, arg) in enumerate(ops):
+            if op == "alloc":
+                try:
+                    live.append(alloc.malloc(arg))
+                except AllocatorOOM:
+                    pass
+                except DeviceOOM as e:
+                    raise AssertionError(
+                        f"raw DeviceOOM escaped {alloc.name} mid-fault: {e}"
+                    ) from e
+            elif op == "free" and live:
+                alloc.free(live.pop(int(arg * len(live)) % len(live)))
+            elif op == "shrink":
+                device.shrink(arg)
+            elif op == "release":
+                alloc.release_cached()
+            assert alloc.stats.active_bytes <= alloc.reserved_bytes, (
+                f"{alloc.name}: active exceeds reserved after op {i} ({op})"
+            )
+            if i % 7 == 0:
+                alloc.check_invariants()
+        _drain(alloc, live, device)
+
+
+class TestCachingFaultFuzz(_FaultFuzz):
+    backend = "caching"
+
+
+class TestNativeFaultFuzz(_FaultFuzz):
+    backend = "native"
+
+
+class TestGMLakeFaultFuzz(_FaultFuzz):
+    backend = "gmlake"
+
+
+class TestSTAllocFaultFuzz(_FaultFuzz):
+    backend = "stalloc"
+
+
+class TestELLMFaultFuzz(_FaultFuzz):
+    backend = "ellm"
+
+
+class TestHybridFaultFuzz(_FaultFuzz):
+    backend = "hybrid"
+
+
+def test_every_backend_is_fault_fuzzed():
+    """A new backend registration must join the fault property layer."""
+    fuzzed = {c.backend for c in _FaultFuzz.__subclasses__()}
     assert fuzzed == set(registry.names())
 
 

@@ -29,6 +29,7 @@ from repro.alloc import (
     VMMDevice,
     registry,
 )
+from repro.alloc.chunks import CHUNK_SIZE, round_up
 from repro.core import PAPER_MODELS, replay, training_trace
 
 BACKENDS = registry.names()
@@ -146,11 +147,13 @@ def test_planning_backends_prepare_and_hit(name):
     assert not a.needs_prepare
     assert plan.capacity > 0
     # replaying the profiled trace through the prepared instance: every
-    # request is served from the plan, and the arena reservation is exact
+    # request is served from the plan, and the arena reservation is the
+    # plan capacity at the device's chunk granularity (what cu_malloc
+    # actually holds — reserved_bytes must agree with device used_bytes)
     res, _ = replay(tr, a)
     assert a.fallback_allocs == 0
     assert a.planned_allocs == tr.n_allocs
-    assert res.stats.peak_reserved == plan.capacity
+    assert res.stats.peak_reserved == round_up(plan.capacity, CHUNK_SIZE)
 
 
 def test_unknown_backend_is_a_loud_error():
@@ -201,13 +204,15 @@ def test_stalloc_replans_a_used_instance_by_draining_the_arena():
     a.prepare(tr)  # unused instance: replanning is a no-op swap
     x = a.malloc(plan1.sizes[0])  # a planned hit: reserves + advances cursor
     assert a.planned_allocs == 1
+    cap1 = round_up(plan1.capacity, CHUNK_SIZE)  # device-rounded reservation
     plan2 = a.prepare(tr)  # used instance: old arena retires, keeps x alive
-    assert a.reserved_bytes == plan1.capacity  # draining, not freed
+    assert a.reserved_bytes == cap1  # draining, not freed
     y = a.malloc(plan2.sizes[0])  # reserves the NEW arena alongside
+    cap2 = round_up(plan2.capacity, CHUNK_SIZE)
     assert a.planned_allocs == 2
-    assert a.reserved_bytes == plan1.capacity + plan2.capacity
+    assert a.reserved_bytes == cap1 + cap2
     a.free(x)  # last block of the retired arena: its reservation drops
-    assert a.reserved_bytes == plan2.capacity
+    assert a.reserved_bytes == cap2
     assert a.event_log.summary()["counts"] == {
         "arena_retired": 1,
         "arena_drained": 1,

@@ -196,7 +196,7 @@ def test_capacity_shrink_plus_burst_recovered_by_ladder():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("backend", ["gmlake", "caching"])
+@pytest.mark.parametrize("backend", ["gmlake", "caching", "ellm", "hybrid"])
 def test_kill_recover_scenario_restores_and_finishes(backend, tmp_path):
     """Acceptance criterion: mid-trace capacity loss + transient burst
     forces at least one checkpoint restore, every request still finishes,

@@ -136,12 +136,15 @@ GOLDEN = {
         oom=True, oom_at_event=7, n_alloc=7, n_free=0,
     ),
     # -- stalloc: planned peak beats caching on every trace; reserved is
-    # the plan's single upfront arena. Round-4 size-ordered offset
-    # assignment (place large intervals first) cut planned fragmentation
-    # to train 0.7% / 0.7% / serve 14.5% (was 7.4 / 3.9 / 14.9; caching:
-    # 31 / 34 / 63%) — see BENCHMARKS.md §5.1 ---------------------------
+    # the plan's single upfront arena *at device chunk granularity* (the
+    # chaos sentinel's drain agreement caught the arena being published
+    # un-rounded while cu_malloc holds the 2 MB-rounded size — the
+    # planned peaks below carry that sub-chunk correction). Round-4
+    # size-ordered offset assignment (place large intervals first) cut
+    # planned fragmentation to train 0.7% / 0.7% / serve 14.5% (was
+    # 7.4 / 3.9 / 14.9; caching: 31 / 34 / 63%) — see BENCHMARKS.md §5.1
     ("train_opt13b_LRO", "stalloc", 80): dict(
-        state_counts=None, peak_active=20028047360, peak_reserved=20164362240,
+        state_counts=None, peak_active=20028047360, peak_reserved=20166213632,
         oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
     ),
     # 20 GB device: the round-3 arrival-order plan needed 21.6 GB and
@@ -149,15 +152,15 @@ GOLDEN = {
     # planner now completes the trace a 20 GB device (like gmlake, and
     # unlike caching which strands its way to an OOM at event 12746)
     ("train_opt13b_LRO", "stalloc", 20): dict(
-        state_counts=None, peak_active=20028047360, peak_reserved=20164362240,
+        state_counts=None, peak_active=20028047360, peak_reserved=20166213632,
         oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
     ),
     ("train_opt1.3b_LR", "stalloc", 80): dict(
-        state_counts=None, peak_active=7302905856, peak_reserved=7357431808,
+        state_counts=None, peak_active=7302905856, peak_reserved=7358906368,
         oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
     ),
     ("serve_vicuna", "stalloc", 80): dict(
-        state_counts=None, peak_active=24018124800, peak_reserved=28092825600,
+        state_counts=None, peak_active=24018124800, peak_reserved=28093448192,
         oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
     ),
     ("serve_vicuna", "stalloc", 16): dict(
@@ -267,23 +270,24 @@ GOLDEN = {
     # -- hybrid: packed-plan statics + embedded gmlake core for the
     # unplanned tail. On these fault-free traces with a full-trace plan
     # every request lands in the plan, so the core stays idle (all state
-    # counts zero) and peak_reserved is exactly the packed plan capacity:
-    # training matches stalloc (polish auto-skips — the FFD plan is
-    # already within 5% of the lower bound) while serving drops from
-    # stalloc's 28.09 GB arena to 26.95 GB (ruin-and-recreate packing) --
+    # counts zero) and peak_reserved is the packed plan capacity at
+    # device chunk granularity: training matches stalloc (polish
+    # auto-skips — the FFD plan is already within 5% of the lower bound)
+    # while serving drops from stalloc's 28.09 GB arena to 26.95 GB
+    # (ruin-and-recreate packing) ---------------------------------------
     ("train_opt13b_LRO", "hybrid", 80): dict(
         state_counts={"S1": 0, "S2": 0, "S3": 0, "S4": 0, "S5": 0},
-        peak_active=20028047360, peak_reserved=20164362240,
+        peak_active=20028047360, peak_reserved=20166213632,
         oom=False, oom_at_event=None, n_alloc=8201, n_free=8032,
     ),
     ("train_opt1.3b_LR", "hybrid", 80): dict(
         state_counts={"S1": 0, "S2": 0, "S3": 0, "S4": 0, "S5": 0},
-        peak_active=7302905856, peak_reserved=7357431808,
+        peak_active=7302905856, peak_reserved=7358906368,
         oom=False, oom_at_event=None, n_alloc=4273, n_free=4072,
     ),
     ("serve_vicuna", "hybrid", 80): dict(
         state_counts={"S1": 0, "S2": 0, "S3": 0, "S4": 0, "S5": 0},
-        peak_active=24018124800, peak_reserved=26954137600,
+        peak_active=24018124800, peak_reserved=26954694656,
         oom=False, oom_at_event=None, n_alloc=2000, n_free=2000,
     ),
     ("serve_engine_smollm", "hybrid", 2): dict(
